@@ -1,0 +1,92 @@
+"""§Perf hillclimb driver: lower chosen (arch × shape × mesh) pairs under
+variant knobs and report roofline-term deltas vs baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair deepseek --pair fed
+"""
+
+# NOTE: repro.launch.dryrun sets XLA_FLAGS (512 host devices) at import time,
+# before jax initializes — keep this import first.
+from repro.launch.dryrun import VARIANTS, run_combo  # noqa: E402
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+# The three §Perf subjects (chosen per EXPERIMENTS.md §Roofline):
+#   deepseek — most collective-bound pair (EP MoE all-to-all)
+#   memory   — worst memory-bound serving pair
+#   fed      — the paper's own technique at production scale (multi-pod FedAvg)
+PAIRS: dict[str, dict] = {
+    "deepseek": {
+        "arch": "deepseek-v3-671b",
+        "shape": "train_4k",
+        "mesh": "single",
+        "variants": ["baseline", "moe_tp", "capacity1", "capacity2", "noremat"],
+    },
+    "memory": {
+        "arch": "llama4-scout-17b-a16e",
+        "shape": "decode_32k",
+        "mesh": "single",
+        "variants": ["baseline", "moe_tp", "capacity1"],
+    },
+    "fed": {
+        "arch": "qwen3-1.7b",
+        "shape": "train_4k",
+        "mesh": "multi",
+        "variants": ["fed_k1", "fed_k4", "fed_k16"],
+    },
+    "attn": {
+        "arch": "yi-9b",
+        "shape": "prefill_32k",
+        "mesh": "single",
+        "variants": ["baseline", "kvchunk4096"],
+    },
+}
+
+
+def per_token_norm(rec: dict) -> float:
+    """Collective-term seconds normalized per local training step."""
+    k = rec.get("tags", {}).get("fed_local_steps")
+    return float(k) if k else 1.0
+
+
+def report(pair_name: str, force: bool) -> None:
+    spec = PAIRS[pair_name]
+    print(f"\n=== {pair_name}: {spec['arch']} x {spec['shape']} x {spec['mesh']} ===")
+    rows = []
+    for variant in spec["variants"]:
+        rec = run_combo(spec["arch"], spec["shape"], spec["mesh"], force=force, variant=variant)
+        if "error" in rec:
+            rows.append((variant, None))
+            continue
+        rows.append((variant, rec))
+    base = next((r for v, r in rows if r is not None), None)
+    if base is None:
+        print("  all variants failed")
+        return
+    print(f"{'variant':14s} {'compute':>12s} {'memory':>12s} {'collective':>12s} {'dominant':>10s} {'norm':>6s}")
+    for variant, rec in rows:
+        if rec is None:
+            print(f"{variant:14s}    FAILED")
+            continue
+        r = rec["roofline"]
+        norm = per_token_norm(rec)
+        print(
+            f"{variant:14s} {r['compute_s']/norm:12.3e} {r['memory_s']/norm:12.3e} "
+            f"{r['collective_s']/norm:12.3e} {r['dominant']:>10s} {norm:6.0f}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", action="append", choices=list(PAIRS), default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    for pair in args.pair or list(PAIRS):
+        report(pair, args.force)
+
+
+if __name__ == "__main__":
+    main()

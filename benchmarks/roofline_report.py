@@ -1,0 +1,112 @@
+"""Aggregate the dry-run sweep into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+ARCH_ORDER = [
+    "qwen3-1.7b", "mamba2-130m", "seamless-m4t-large-v2", "deepseek-v3-671b",
+    "smollm-135m", "yi-9b", "internvl2-26b", "nemotron-4-15b",
+    "llama4-scout-17b-a16e", "zamba2-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-6:
+        return f"{x*1e9:.1f}ns"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1.0:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_bytes(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(mesh: str, variant: str = "baseline") -> dict[tuple[str, str], dict]:
+    out = {}
+    for f in RESULTS.glob(f"*__{mesh}__{variant}.json"):
+        rec = json.loads(f.read_text())
+        if "roofline" in rec:
+            out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def table(mesh: str, variant: str = "baseline") -> str:
+    recs = load(mesh, variant)
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | useful FLOPs | bytes/dev | coll bytes |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = recs.get((arch, shape))
+            if rec is None:
+                rows.append(f"| {arch} | {shape} | - | - | - | MISSING | - | - | - |")
+                continue
+            r = rec["roofline"]
+            mem = rec["memory"]
+            per_dev = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0))
+            useful = r["useful_flops_ratio"]
+            rows.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+                f"| {useful:.3f} | {fmt_bytes(per_dev)} | {fmt_bytes(r['coll_bytes'])} |"
+                if useful is not None else
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** | - "
+                f"| {fmt_bytes(per_dev)} | {fmt_bytes(r['coll_bytes'])} |"
+            )
+    return "\n".join(rows)
+
+
+def summary(mesh: str) -> str:
+    recs = load(mesh)
+    dom = {}
+    for rec in recs.values():
+        dom[rec["roofline"]["dominant"]] = dom.get(rec["roofline"]["dominant"], 0) + 1
+    lines = [f"mesh={mesh}: {len(recs)} pairs compiled; dominance: {dom}"]
+    # worst useful-flops ratio and most collective-bound
+    ranked = sorted(
+        (r for r in recs.values() if r["roofline"]["useful_flops_ratio"]),
+        key=lambda r: r["roofline"]["useful_flops_ratio"],
+    )
+    if ranked:
+        w = ranked[0]
+        lines.append(
+            f"worst useful-FLOPs: {w['arch']} x {w['shape']} "
+            f"({w['roofline']['useful_flops_ratio']:.3f})"
+        )
+    coll = max(recs.values(), key=lambda r: r["roofline"]["collective_s"])
+    lines.append(f"most collective-bound: {coll['arch']} x {coll['shape']} "
+                 f"({fmt_s(coll['roofline']['collective_s'])}/step)")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    print(table(args.mesh, args.variant))
+    print()
+    print(summary(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

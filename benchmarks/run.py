@@ -1,0 +1,159 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  table4_*   — paper Table 4 (central + 4 federated settings) at benchmark
+               scale; us_per_call = wall time per local training step,
+               derived = test MSLE.
+  table5_*   — paper Table 5 (QG / DG recruitment ablations).
+  fig2_*     — paper Fig. 2 (gamma_th sweep); derived = clients recruited.
+  kernel_*   — Pallas kernels vs jnp oracle (interpret mode on CPU);
+               derived = max |err| vs the oracle.
+  roofline_* — per (arch x shape) dry-run roofline terms from
+               benchmarks/results/dryrun; us_per_call = dominant-term
+               seconds * 1e6, derived = dominant term name.
+
+Full-scale paper numbers (the ones recorded in EXPERIMENTS.md) come from
+``python -m repro.experiments.run_full``; this harness keeps the default
+run CPU-budget friendly (~ a few minutes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    ROWS.append((name, us_per_call, str(derived)))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+# --------------------------------------------------------------------------
+# paper tables (benchmark scale)
+# --------------------------------------------------------------------------
+
+def bench_paper_tables(scale: float, seeds: list[int]) -> None:
+    from repro.experiments.paper import ExperimentConfig, build_cohort, run_setting
+
+    exp = ExperimentConfig(cohort_scale=scale, rounds=5, local_epochs=2, central_epochs=5)
+    cohort = build_cohort(exp, seed=0)
+    table4 = ["central", "federated-ac", "federated-sc", "federated-arc", "federated-src"]
+    table5 = ["federated-src-qg", "federated-src-dg"]
+    for setting in table4 + table5:
+        msles, taus, steps = [], [], []
+        for seed in seeds:
+            out = run_setting(setting, exp, cohort, seed=seed)
+            msles.append(out["metrics"]["msle"])
+            taus.append(out["tau_s"])
+            steps.append(out["local_steps"])
+        us_per_step = 1e6 * (sum(taus) / len(taus)) / max(sum(steps) / len(steps), 1)
+        prefix = "table5" if setting in table5 else "table4"
+        emit(f"{prefix}_{setting}", us_per_step, f"msle={sum(msles)/len(msles):.4f}")
+
+
+def bench_fig2(scale: float) -> None:
+    import dataclasses
+
+    from repro.experiments.paper import ExperimentConfig, build_cohort, run_setting
+
+    exp = ExperimentConfig(cohort_scale=scale, rounds=3, local_epochs=1)
+    cohort = build_cohort(exp, seed=0)
+    for gth in (0.05, 0.1, 0.3, 0.6, 1.0):
+        e = dataclasses.replace(exp, gamma_th=gth)
+        out = run_setting("federated-src", e, cohort, seed=0)
+        us = 1e6 * out["tau_s"] / max(out["local_steps"], 1)
+        emit(f"fig2_gamma{gth}", us, f"recruited={out['recruited']}")
+
+
+# --------------------------------------------------------------------------
+# kernels
+# --------------------------------------------------------------------------
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.gru_scan.kernel import gru_scan
+    from repro.kernels.gru_scan.ref import gru_scan_ref
+    from repro.kernels.ssd.ops import ssd_full
+    from repro.kernels.ssd.ref import ssd_ref
+
+    rng = np.random.default_rng(0)
+
+    def timeit(fn, *args, reps: int = 5) -> float:
+        jax.block_until_ready(fn(*args))  # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        return 1e6 * (time.perf_counter() - t0) / reps
+
+    # paper-shaped GRU layer (batch 128, 24h, N=32)
+    xg = jnp.asarray(rng.normal(size=(128, 24, 96)), jnp.float32)
+    whh = jnp.asarray(rng.normal(size=(32, 96)) * 0.3, jnp.float32)
+    bhh = jnp.zeros(96)
+    err = float(jnp.max(jnp.abs(gru_scan(xg, whh, bhh) - gru_scan_ref(xg, whh, bhh))))
+    emit("kernel_gru_scan_interp", timeit(gru_scan, xg, whh, bhh), f"maxerr={err:.2e}")
+    emit("kernel_gru_ref", timeit(jax.jit(gru_scan_ref), xg, whh, bhh), "oracle")
+
+    # mamba2-130m-shaped SSD chunk (scaled down for CPU)
+    b, s, h, p, n = 2, 256, 8, 32, 64
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.normal(size=(b, s, h)), jnp.float32))
+    a = -jnp.exp(jnp.asarray(rng.normal(size=(h,)) * 0.5, jnp.float32))
+    bm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    run_kernel = lambda: ssd_full(x, dt, a, bm, cm, chunk=64)
+    run_ref = jax.jit(lambda: ssd_ref(x, dt, a, bm, cm))
+    err = float(jnp.max(jnp.abs(run_kernel() - run_ref())))
+    emit("kernel_ssd_interp", timeit(run_kernel), f"maxerr={err:.2e}")
+    emit("kernel_ssd_ref", timeit(run_ref), "oracle")
+
+
+# --------------------------------------------------------------------------
+# roofline (reads the dry-run sweep)
+# --------------------------------------------------------------------------
+
+def bench_roofline() -> None:
+    results = Path(__file__).resolve().parent / "results" / "dryrun"
+    if not results.exists():
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in sorted(results.glob("*__single__baseline.json")):
+        rec = json.loads(f.read_text())
+        if "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        dom_s = {"compute": r["compute_s"], "memory": r["memory_s"], "collective": r["collective_s"]}[r["dominant"]]
+        useful = r["useful_flops_ratio"]
+        emit(
+            f"roofline_{rec['arch']}_{rec['shape']}",
+            dom_s * 1e6,
+            f"dominant={r['dominant']};useful={round(useful, 3) if useful else None}",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1])
+    ap.add_argument("--skip-paper", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    bench_kernels()
+    bench_roofline()
+    if not args.skip_paper:
+        bench_paper_tables(args.scale, args.seeds)
+        bench_fig2(args.scale)
+    print(f"# total benchmark time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

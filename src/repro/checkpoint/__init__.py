@@ -1,0 +1,3 @@
+from repro.checkpoint.store import load_pytree, restore_server_state, save_pytree, save_server_state
+
+__all__ = ["load_pytree", "save_pytree", "save_server_state", "restore_server_state"]

@@ -1,0 +1,97 @@
+"""Pytree checkpointing: npz payload + msgpack manifest of the treedef.
+
+No orbax offline; this covers what the framework needs — atomic save/restore
+of parameter/optimizer pytrees and the federated server's round state — with
+structure validation on load.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+_PAYLOAD = "arrays.npz"
+
+
+def _flatten_with_paths(tree: PyTree) -> list[tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def save_pytree(directory: str, tree: PyTree, metadata: dict | None = None) -> None:
+    """Atomic directory save: write to tmp, then rename files into place."""
+    os.makedirs(directory, exist_ok=True)
+    entries = _flatten_with_paths(tree)
+    payload = {f"a{i}": arr for i, (_, arr) in enumerate(entries)}
+    manifest = {
+        "keys": [k for k, _ in entries],
+        "dtypes": [str(a.dtype) for _, a in entries],
+        "shapes": [list(a.shape) for _, a in entries],
+        "metadata": metadata or {},
+    }
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
+    with os.fdopen(fd, "wb") as f:  # file handle: savez must not mangle the name
+        np.savez(f, **payload)
+    os.replace(tmp, os.path.join(directory, _PAYLOAD))
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".json.tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(directory, _MANIFEST))
+
+
+def load_pytree(directory: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (validates key alignment)."""
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, _PAYLOAD))
+    arrays = [data[f"a{i}"] for i in range(len(manifest["keys"]))]
+
+    entries = _flatten_with_paths(like)
+    saved_keys = manifest["keys"]
+    like_keys = [k for k, _ in entries]
+    if saved_keys != like_keys:
+        missing = set(like_keys) - set(saved_keys)
+        extra = set(saved_keys) - set(like_keys)
+        raise ValueError(f"checkpoint structure mismatch; missing={missing} extra={extra}")
+    for (key, ref), arr in zip(entries, arrays):
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {ref.shape}")
+    leaves = [a.astype(r.dtype) for a, (_, r) in zip(arrays, entries)]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_metadata(directory: str) -> dict:
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        return json.load(f)["metadata"]
+
+
+def save_server_state(directory: str, params: PyTree, round_index: int, history: list) -> None:
+    save_pytree(
+        directory,
+        params,
+        metadata={
+            "round_index": round_index,
+            "history": [
+                {"round": r.round_index, "loss": r.mean_local_loss, "participants": r.participant_ids}
+                for r in history
+            ],
+        },
+    )
+
+
+def restore_server_state(directory: str, like_params: PyTree) -> tuple[PyTree, dict]:
+    params = load_pytree(directory, like_params)
+    return params, checkpoint_metadata(directory)

@@ -1,0 +1,81 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+
+from __future__ import annotations
+
+from repro.configs.base import (
+    Activation,
+    ArchConfig,
+    ArchType,
+    HybridConfig,
+    MLAConfig,
+    MoEConfig,
+    SSMConfig,
+)
+
+
+def _registry() -> dict[str, ArchConfig]:
+    from repro.configs import (
+        deepseek_v3_671b,
+        internvl2_26b,
+        llama4_scout_17b_a16e,
+        mamba2_130m,
+        nemotron_4_15b,
+        qwen3_1_7b,
+        seamless_m4t_large_v2,
+        smollm_135m,
+        yi_9b,
+        zamba2_7b,
+    )
+
+    configs = [
+        qwen3_1_7b.CONFIG,
+        mamba2_130m.CONFIG,
+        seamless_m4t_large_v2.CONFIG,
+        deepseek_v3_671b.CONFIG,
+        smollm_135m.CONFIG,
+        yi_9b.CONFIG,
+        internvl2_26b.CONFIG,
+        nemotron_4_15b.CONFIG,
+        llama4_scout_17b_a16e.CONFIG,
+        zamba2_7b.CONFIG,
+    ]
+    return {c.name: c for c in configs}
+
+
+ARCH_IDS: tuple[str, ...] = (
+    "qwen3-1.7b",
+    "mamba2-130m",
+    "seamless-m4t-large-v2",
+    "deepseek-v3-671b",
+    "smollm-135m",
+    "yi-9b",
+    "internvl2-26b",
+    "nemotron-4-15b",
+    "llama4-scout-17b-a16e",
+    "zamba2-7b",
+)
+
+
+def get_config(name: str) -> ArchConfig:
+    reg = _registry()
+    if name not in reg:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(reg)}")
+    return reg[name]
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return _registry()
+
+
+__all__ = [
+    "Activation",
+    "ArchConfig",
+    "ArchType",
+    "HybridConfig",
+    "MLAConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ARCH_IDS",
+    "get_config",
+    "all_configs",
+]

@@ -1,0 +1,39 @@
+"""Core contribution of the paper: pre-federation client recruitment."""
+
+from repro.core.histogram import (
+    LOS_BIN_EDGES,
+    NUM_LOS_BINS,
+    l1_divergence,
+    normalize,
+    target_histogram,
+    token_histogram,
+)
+from repro.core.recruitment import (
+    BALANCED,
+    DATA_GREEDY,
+    QUALITY_GREEDY,
+    ClientStats,
+    RecruitmentConfig,
+    RecruitmentResult,
+    recruit,
+    recruitment_curve,
+    representativeness,
+)
+
+__all__ = [
+    "LOS_BIN_EDGES",
+    "NUM_LOS_BINS",
+    "l1_divergence",
+    "normalize",
+    "target_histogram",
+    "token_histogram",
+    "BALANCED",
+    "DATA_GREEDY",
+    "QUALITY_GREEDY",
+    "ClientStats",
+    "RecruitmentConfig",
+    "RecruitmentResult",
+    "recruit",
+    "recruitment_curve",
+    "representativeness",
+]

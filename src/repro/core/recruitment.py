@@ -1,0 +1,135 @@
+"""Client recruitment (the paper's core contribution).
+
+Prior to forming a federation, every candidate client ``c`` reports only the
+tuple ``(P_co, n_c)`` — its local *target histogram* and sample size.  The
+server computes per-client representativeness (paper eq. 4)::
+
+    nu_c = gamma_dv * sum_bins | P_go/n_g - P_co/n_c |  +  gamma_sa * n_c^-0.5
+
+(lower = more representative) and recruits greedily in ascending-nu order
+until the cumulative representativeness crosses ``iota = gamma_th * nu_g``
+with ``nu_g = sum_c nu_c`` (paper eq. 5).
+
+Nothing here touches model parameters or raw features — recruitment is
+model-agnostic by construction, which is why it composes with every
+architecture in the zoo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.histogram import normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientStats:
+    """What a candidate client discloses to the recruitment server."""
+
+    client_id: int
+    counts: np.ndarray  # per-bin target counts, shape (num_bins,)
+    n: int              # local sample size
+
+    def __post_init__(self) -> None:
+        if self.n <= 0:
+            raise ValueError(f"client {self.client_id}: sample size must be positive, got {self.n}")
+        if np.any(np.asarray(self.counts) < 0):
+            raise ValueError(f"client {self.client_id}: negative histogram counts")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecruitmentConfig:
+    gamma_dv: float = 0.5   # weight of target-distribution divergence
+    gamma_sa: float = 0.5   # weight of the n_c^-0.5 sample-size term
+    gamma_th: float = 0.1   # fraction of global representativeness to cover
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.gamma_th <= 1.0):
+            raise ValueError(f"gamma_th must be in (0, 1], got {self.gamma_th}")
+        if self.gamma_dv < 0 or self.gamma_sa < 0:
+            raise ValueError("gamma weights must be non-negative")
+
+
+# Paper section 6.2 presets.
+BALANCED = RecruitmentConfig(gamma_dv=0.5, gamma_sa=0.5, gamma_th=0.1)
+QUALITY_GREEDY = RecruitmentConfig(gamma_dv=1.0, gamma_sa=0.01, gamma_th=0.1)
+DATA_GREEDY = RecruitmentConfig(gamma_dv=0.01, gamma_sa=1.0, gamma_th=0.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecruitmentResult:
+    recruited_ids: np.ndarray      # client ids, ascending-nu order
+    nu: np.ndarray                 # per-client nu, aligned with ``client_ids``
+    client_ids: np.ndarray         # all candidate ids (input order)
+    nu_g: float                    # global representativeness (sum of nu)
+    iota: float                    # recruitment threshold gamma_th * nu_g
+
+    @property
+    def num_recruited(self) -> int:
+        return int(self.recruited_ids.size)
+
+    def is_recruited(self, client_id: int) -> bool:
+        return bool(np.isin(client_id, self.recruited_ids))
+
+
+def representativeness(
+    stats: Sequence[ClientStats],
+    config: RecruitmentConfig,
+) -> np.ndarray:
+    """Per-client nu_c (paper eq. 4), aligned with ``stats`` order."""
+    if not stats:
+        raise ValueError("no candidate clients")
+    counts = np.stack([np.asarray(s.counts, dtype=np.float64) for s in stats])
+    n = np.array([s.n for s in stats], dtype=np.float64)
+    # P_go = sum_c P_co (counts); P_go/n_g is the normalized global histogram.
+    global_counts = counts.sum(axis=0)
+    p_global = normalize(global_counts)
+    p_local = counts / np.maximum(n[:, None], 1.0)
+    divergence = np.abs(p_global[None, :] - p_local).sum(axis=1)
+    return config.gamma_dv * divergence + config.gamma_sa * n ** -0.5
+
+
+def recruit(
+    stats: Sequence[ClientStats],
+    config: RecruitmentConfig = BALANCED,
+) -> RecruitmentResult:
+    """Greedy threshold recruitment (paper section 4.2).
+
+    Sort nu ascending (most representative first), accumulate, and recruit
+    every client up to and including the one at which the running sum crosses
+    ``iota = gamma_th * nu_g``.  ``gamma_th = 1`` recruits everyone.
+    """
+    nu = representativeness(stats, config)
+    client_ids = np.array([s.client_id for s in stats], dtype=np.int64)
+    order = np.argsort(nu, kind="stable")
+    nu_sorted = nu[order]
+    nu_g = float(nu.sum())
+    iota = config.gamma_th * nu_g
+    cumulative = np.cumsum(nu_sorted)
+    # First index where the running sum reaches the threshold; recruit through it.
+    crossed = np.searchsorted(cumulative, iota, side="left")
+    cutoff = min(int(crossed) + 1, len(stats))
+    recruited = client_ids[order][:cutoff]
+    return RecruitmentResult(
+        recruited_ids=recruited,
+        nu=nu,
+        client_ids=client_ids,
+        nu_g=nu_g,
+        iota=iota,
+    )
+
+
+def recruitment_curve(
+    stats: Sequence[ClientStats],
+    config: RecruitmentConfig,
+    gamma_ths: Sequence[float],
+) -> list[tuple[float, int]]:
+    """(gamma_th, num_recruited) pairs for the paper's Fig. 2 sweep."""
+    out = []
+    for g in gamma_ths:
+        cfg = dataclasses.replace(config, gamma_th=g)
+        out.append((float(g), recruit(stats, cfg).num_recruited))
+    return out

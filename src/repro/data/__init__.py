@@ -1,0 +1,19 @@
+from repro.data.pipeline import (
+    ArrayDataset,
+    ClientDataset,
+    build_client_datasets,
+    global_dataset,
+    lm_token_batch,
+)
+from repro.data.synth_eicu import Cohort, CohortConfig, generate_cohort
+
+__all__ = [
+    "ArrayDataset",
+    "ClientDataset",
+    "build_client_datasets",
+    "global_dataset",
+    "lm_token_batch",
+    "Cohort",
+    "CohortConfig",
+    "generate_cohort",
+]

@@ -1,0 +1,184 @@
+"""The paper's experiments, end to end, on the synthetic eICU cohort.
+
+Five model settings (paper section 6):
+
+  central        — pooled training, 15 epochs (upper bound)
+  federated-ac   — all 189 clients, all participate each round
+  federated-sc   — all clients in federation, 10% sampled per round (the
+                   "standard FL" baseline the paper tests against)
+  federated-arc  — recruited clients only, all participate
+  federated-src  — recruited clients only, 10% sampled per round
+
+plus the section 6.2 ablations (quality-greedy / data-greedy) and the
+gamma_th sweep of Fig. 2.  Each run reports the paper's four metrics plus
+wall-time tau and simulated local-step counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.recruitment import (
+    BALANCED,
+    DATA_GREEDY,
+    QUALITY_GREEDY,
+    RecruitmentConfig,
+)
+from repro.data.pipeline import ArrayDataset, build_client_datasets, global_dataset
+from repro.data.synth_eicu import Cohort, CohortConfig, generate_cohort
+from repro.federated.central import CentralConfig, train_central
+from repro.federated.server import FederatedConfig, FederatedServer
+from repro.metrics.regression import evaluate_predictions
+from repro.models.gru import GRUConfig, gru_apply, init_gru, make_loss_fn
+from repro.optim.adamw import AdamW
+
+MODEL_SETTINGS = (
+    "central",
+    "federated-ac",
+    "federated-sc",
+    "federated-arc",
+    "federated-src",
+    "federated-src-qg",
+    "federated-src-dg",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    """Paper-faithful defaults (Tables 1 and 3)."""
+
+    cohort_scale: float = 1.0      # 1.0 = full 89,127-stay cohort
+    rounds: int = 15
+    local_epochs: int = 4
+    central_epochs: int = 15
+    batch_size: int = 128
+    learning_rate: float = 5e-3
+    weight_decay: float = 5e-3
+    participation_fraction: float = 0.1
+    gamma_dv: float = 0.5
+    gamma_sa: float = 0.5
+    gamma_th: float = 0.1
+    use_pallas: bool = False
+
+
+def recruitment_for(setting: str, exp: ExperimentConfig) -> RecruitmentConfig | None:
+    if setting in ("central", "federated-ac", "federated-sc"):
+        return None
+    if setting == "federated-src-qg":
+        return dataclasses.replace(QUALITY_GREEDY, gamma_th=exp.gamma_th)
+    if setting == "federated-src-dg":
+        return dataclasses.replace(DATA_GREEDY, gamma_th=exp.gamma_th)
+    return RecruitmentConfig(exp.gamma_dv, exp.gamma_sa, exp.gamma_th)
+
+
+def participation_for(setting: str, exp: ExperimentConfig) -> float | None:
+    if setting in ("federated-ac", "federated-arc"):
+        return None  # everyone, every round
+    return exp.participation_fraction
+
+
+def build_cohort(exp: ExperimentConfig, seed: int) -> Cohort:
+    cfg = CohortConfig()
+    if exp.cohort_scale != 1.0:
+        cfg = cfg.scaled(exp.cohort_scale)
+    return generate_cohort(cfg, seed=seed)
+
+
+def run_setting(
+    setting: str,
+    exp: ExperimentConfig,
+    cohort: Cohort,
+    seed: int,
+    progress: Any | None = None,
+) -> dict[str, Any]:
+    """Train one model setting and evaluate on the hold-out test split."""
+    if setting not in MODEL_SETTINGS:
+        raise ValueError(f"unknown setting {setting}; choose from {MODEL_SETTINGS}")
+
+    model_cfg = GRUConfig(use_pallas=exp.use_pallas)
+    loss_fn = make_loss_fn(model_cfg)
+    optimizer = AdamW(learning_rate=exp.learning_rate, weight_decay=exp.weight_decay)
+    init_params = init_gru(jax.random.key(seed), model_cfg)
+    test = global_dataset(cohort, Cohort.TEST)
+
+    info: dict[str, Any] = {"setting": setting, "seed": seed}
+    if setting == "central":
+        result = train_central(
+            CentralConfig(epochs=exp.central_epochs, batch_size=exp.batch_size, seed=seed),
+            global_dataset(cohort, Cohort.TRAIN),
+            init_params,
+            loss_fn,
+            optimizer,
+        )
+        params = result.params
+        info.update(
+            tau_s=result.total_wall_time_s,
+            local_steps=result.total_steps,
+            federation_size=None,
+            recruited=None,
+        )
+    else:
+        clients = build_client_datasets(cohort)
+        fed_cfg = FederatedConfig(
+            rounds=exp.rounds,
+            local_epochs=exp.local_epochs,
+            batch_size=exp.batch_size,
+            participation_fraction=participation_for(setting, exp),
+            recruitment=recruitment_for(setting, exp),
+            seed=seed,
+        )
+        server = FederatedServer(fed_cfg, clients, loss_fn, optimizer)
+        result = server.run(init_params, progress=progress)
+        params = result.params
+        info.update(
+            tau_s=result.total_wall_time_s,
+            local_steps=result.total_local_steps,
+            federation_size=int(result.federation_ids.size),
+            recruited=None if result.recruitment is None else result.recruitment.num_recruited,
+        )
+
+    y_hat = np.asarray(_predict(params, model_cfg, test))
+    info["metrics"] = evaluate_predictions(test.y, y_hat)
+    return info
+
+
+def _predict(params, model_cfg: GRUConfig, dataset: ArrayDataset, batch: int = 2048) -> np.ndarray:
+    fn = jax.jit(lambda p, x: gru_apply(p, model_cfg, x))
+    outs = []
+    for start in range(0, len(dataset), batch):
+        outs.append(np.asarray(fn(params, dataset.x[start : start + batch])))
+    return np.concatenate(outs)
+
+
+def run_seeds(
+    setting: str, exp: ExperimentConfig, seeds: list[int], verbose: bool = True
+) -> dict[str, Any]:
+    """Multi-seed runs -> mean/std per metric (paper reports mean +/- std)."""
+    runs = []
+    for seed in seeds:
+        cohort = build_cohort(exp, seed=seed)
+        out = run_setting(setting, exp, cohort, seed=seed)
+        if verbose:
+            m = out["metrics"]
+            print(
+                f"  [{setting} seed={seed}] mae={m['mae']:.3f} mape={m['mape']:.3f} "
+                f"mse={m['mse']:.2f} msle={m['msle']:.3f} tau={out['tau_s']:.1f}s",
+                flush=True,
+            )
+        runs.append(out)
+    agg: dict[str, Any] = {"setting": setting, "seeds": seeds, "runs": runs}
+    for key in ("mae", "mape", "mse", "msle"):
+        vals = np.array([r["metrics"][key] for r in runs])
+        agg[key] = {"mean": float(vals.mean()), "std": float(vals.std(ddof=1) if len(vals) > 1 else 0.0),
+                    "values": vals.tolist()}
+    taus = np.array([r["tau_s"] for r in runs])
+    agg["tau_s"] = {"mean": float(taus.mean()), "std": float(taus.std(ddof=1) if len(taus) > 1 else 0.0),
+                    "values": taus.tolist()}
+    agg["local_steps"] = int(np.mean([r["local_steps"] for r in runs]))
+    agg["federation_size"] = runs[0]["federation_size"]
+    agg["recruited"] = runs[0]["recruited"]
+    return agg

@@ -1,0 +1,53 @@
+"""Full paper-faithful experiment run (invoked in background; writes JSON +
+markdown consumed by EXPERIMENTS.md).
+
+    python -m repro.experiments.run_full --scale 1.0 --seeds 0 1 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.experiments.paper import ExperimentConfig
+from repro.experiments.tables import (
+    run_fig2,
+    run_table4,
+    run_table5,
+    save,
+    to_markdown_table4,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
+    ap.add_argument("--fig2-seeds", type=int, nargs="+", default=[0, 1])
+    ap.add_argument("--skip-fig2", action="store_true")
+    args = ap.parse_args()
+
+    exp = ExperimentConfig(cohort_scale=args.scale)
+    t0 = time.time()
+
+    print(f"=== Table 4 (scale={args.scale}, seeds={args.seeds}) ===", flush=True)
+    t4 = run_table4(exp, args.seeds)
+    save(t4, f"table4_scale{args.scale}.json")
+    print(to_markdown_table4(t4), flush=True)
+
+    print("=== Table 5 (QG/DG ablations) ===", flush=True)
+    t5 = run_table5(exp, args.seeds)
+    save(t5, f"table5_scale{args.scale}.json")
+    print(to_markdown_table4(t5), flush=True)
+
+    if not args.skip_fig2:
+        print("=== Fig 2 (gamma_th sweep) ===", flush=True)
+        fig2 = run_fig2(exp, args.fig2_seeds, [0.05, 0.1, 0.2, 0.4, 0.7, 1.0])
+        save(fig2, f"fig2_scale{args.scale}.json")
+
+    print(f"total experiment time: {(time.time()-t0)/60:.1f} min", flush=True)
+
+
+if __name__ == "__main__":
+    main()

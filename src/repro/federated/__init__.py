@@ -1,0 +1,27 @@
+from repro.federated.central import CentralConfig, CentralRunResult, train_central
+from repro.federated.client import LocalTrainer
+from repro.federated.fedavg import aggregate, apply_delta, delta, params_nbytes, tree_allclose
+from repro.federated.selection import select_clients
+from repro.federated.server import (
+    FederatedConfig,
+    FederatedRunResult,
+    FederatedServer,
+    RoundRecord,
+)
+
+__all__ = [
+    "CentralConfig",
+    "CentralRunResult",
+    "train_central",
+    "LocalTrainer",
+    "aggregate",
+    "apply_delta",
+    "delta",
+    "params_nbytes",
+    "tree_allclose",
+    "select_clients",
+    "FederatedConfig",
+    "FederatedRunResult",
+    "FederatedServer",
+    "RoundRecord",
+]

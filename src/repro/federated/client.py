@@ -1,0 +1,71 @@
+"""Client-side local training for one round of FedAvg.
+
+Each client receives the global parameters, trains for ``local_epochs`` on
+its own data with a *locally initialized* AdamW (FedML-style: the optimizer
+state never leaves the client and is reset each round), and returns only the
+updated parameters plus its sample count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import ClientDataset
+from repro.optim.adamw import AdamW, apply_updates
+
+PyTree = Any
+LossFn = Callable[..., Any]  # loss(params, batch, rng) -> scalar
+
+
+@dataclasses.dataclass
+class LocalTrainer:
+    """Shared, jitted local-training machinery reused across all clients.
+
+    One jitted step serves every client because padded batches keep shapes
+    static — a single compilation for the entire federation.
+    """
+
+    loss_fn: LossFn
+    optimizer: AdamW
+    batch_size: int
+    local_epochs: int
+
+    def __post_init__(self) -> None:
+        def _step(params, opt_state, batch, rng):
+            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch, rng)
+            updates, opt_state = self.optimizer.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, loss
+
+        self._step = jax.jit(_step)
+
+    def train_client(
+        self,
+        params: PyTree,
+        client: ClientDataset,
+        rng: np.random.Generator,
+        jax_rng: jax.Array,
+    ) -> tuple[PyTree, float, int]:
+        """Run local_epochs over the client's train split.
+
+        Returns (updated params, mean train loss of last epoch, n_c).
+        Steps executed counts toward the simulated training cost.
+        """
+        opt_state = self.optimizer.init(params)
+        last_losses: list[float] = []
+        for epoch in range(self.local_epochs):
+            losses = []
+            for x, y, mask in client.train.padded_batches(self.batch_size, rng):
+                jax_rng, sub = jax.random.split(jax_rng)
+                params, opt_state, loss = self._step(params, opt_state, (x, y, mask), sub)
+                losses.append(loss)
+            last_losses = losses
+        mean_loss = float(np.mean([float(l) for l in last_losses])) if last_losses else float("nan")
+        return params, mean_loss, client.n_train
+
+    def steps_per_round(self, client: ClientDataset) -> int:
+        batches = -(-client.n_train // self.batch_size)  # ceil
+        return batches * self.local_epochs

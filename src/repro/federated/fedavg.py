@@ -1,0 +1,53 @@
+"""FedAvg parameter aggregation (McMahan et al. 2017).
+
+``aggregate`` is the server-side weighted average of client parameter
+pytrees; weights default to local sample sizes n_c (the original FedAvg
+weighting).  ``uniform`` weights reproduce plain parameter averaging.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def aggregate(params_list: Sequence[PyTree], weights: Sequence[float] | None = None) -> PyTree:
+    """Weighted average of pytrees: sum_c w_c * params_c / sum_c w_c."""
+    if not params_list:
+        raise ValueError("nothing to aggregate")
+    if weights is None:
+        weights = [1.0] * len(params_list)
+    w = np.asarray(weights, dtype=np.float64)
+    if np.any(w < 0) or w.sum() <= 0:
+        raise ValueError(f"invalid aggregation weights: {weights}")
+    w = (w / w.sum()).astype(np.float32)
+
+    def _avg(*leaves):
+        out = leaves[0] * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            out = out + wi * leaf
+        return out
+
+    return jax.tree.map(_avg, *params_list)
+
+
+def delta(new: PyTree, old: PyTree) -> PyTree:
+    return jax.tree.map(lambda a, b: a - b, new, old)
+
+
+def apply_delta(params: PyTree, d: PyTree, scale: float = 1.0) -> PyTree:
+    return jax.tree.map(lambda p, u: p + scale * u, params, d)
+
+
+def tree_allclose(a: PyTree, b: PyTree, atol: float = 1e-6) -> bool:
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.allclose(x, y, atol=atol) for x, y in zip(leaves_a, leaves_b))
+
+
+def params_nbytes(params: PyTree) -> int:
+    return sum(int(p.size) * p.dtype.itemsize for p in jax.tree.leaves(params))

@@ -1,0 +1,35 @@
+"""Per-round client selection.
+
+The paper uses the standard FedAvg procedure: each round, either all clients
+in the federation participate or a random subset (10% in their experiments)
+is sampled uniformly without replacement.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def select_clients(
+    rng: np.random.Generator,
+    client_ids: np.ndarray,
+    fraction: float | None = None,
+    count: int | None = None,
+) -> np.ndarray:
+    """Uniform random subset of ``client_ids`` for one training round.
+
+    Exactly one of ``fraction`` / ``count`` may be given; neither means all
+    clients participate.  Sampling matches the paper: at least one client,
+    without replacement.
+    """
+    client_ids = np.asarray(client_ids)
+    if fraction is not None and count is not None:
+        raise ValueError("give fraction or count, not both")
+    if fraction is None and count is None:
+        return client_ids.copy()
+    if fraction is not None:
+        if not (0.0 < fraction <= 1.0):
+            raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+        count = max(1, int(round(fraction * len(client_ids))))
+    count = min(int(count), len(client_ids))
+    return rng.choice(client_ids, size=count, replace=False)

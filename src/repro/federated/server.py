@@ -1,0 +1,147 @@
+"""Server-side orchestration of federated training (paper section 4.4).
+
+The server (i) initializes the model, (ii) broadcasts it to the selected
+clients, (iii) aggregates returned parameters with FedAvg, (iv) repeats for
+``rounds`` communication rounds.  With recruitment enabled, the federation
+is built from the recruited subset *before* round one — unrecruited clients
+never receive the model at all (that is the point of the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.recruitment import RecruitmentConfig, RecruitmentResult, recruit
+from repro.data.pipeline import ClientDataset
+from repro.federated.client import LocalTrainer
+from repro.federated.fedavg import aggregate
+from repro.federated.selection import select_clients
+from repro.optim.adamw import AdamW
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedConfig:
+    rounds: int = 15
+    local_epochs: int = 4
+    batch_size: int = 128
+    # Per-round participation: None = all federation clients each round,
+    # otherwise the random fraction sampled each round (paper uses 0.1).
+    participation_fraction: float | None = None
+    # Pre-federation recruitment: None disables (standard FL).
+    recruitment: RecruitmentConfig | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round_index: int
+    participant_ids: list[int]
+    mean_local_loss: float
+    local_steps: int
+    comm_params: int       # parameter tensors exchanged (down + up), in clients
+    wall_time_s: float
+
+
+@dataclasses.dataclass
+class FederatedRunResult:
+    params: PyTree
+    history: list[RoundRecord]
+    recruitment: RecruitmentResult | None
+    federation_ids: np.ndarray
+    total_wall_time_s: float
+    total_local_steps: int
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "rounds": len(self.history),
+            "federation_size": int(self.federation_ids.size),
+            "recruited": None if self.recruitment is None else self.recruitment.num_recruited,
+            "total_wall_time_s": self.total_wall_time_s,
+            "total_local_steps": self.total_local_steps,
+        }
+
+
+class FederatedServer:
+    """Runs the FedAvg protocol over in-process clients."""
+
+    def __init__(
+        self,
+        config: FederatedConfig,
+        clients: Sequence[ClientDataset],
+        loss_fn: Callable[..., Any],
+        optimizer: AdamW,
+    ) -> None:
+        self.config = config
+        self.all_clients = {c.client_id: c for c in clients}
+        self.trainer = LocalTrainer(
+            loss_fn=loss_fn,
+            optimizer=optimizer,
+            batch_size=config.batch_size,
+            local_epochs=config.local_epochs,
+        )
+
+    def build_federation(self) -> tuple[np.ndarray, RecruitmentResult | None]:
+        """Recruitment happens here — before the federation exists."""
+        all_ids = np.array(sorted(self.all_clients), dtype=np.int64)
+        if self.config.recruitment is None:
+            return all_ids, None
+        stats = [self.all_clients[i].stats() for i in all_ids]
+        result = recruit(stats, self.config.recruitment)
+        return np.sort(result.recruited_ids), result
+
+    def run(
+        self,
+        init_params: PyTree,
+        progress: Callable[[RoundRecord], None] | None = None,
+    ) -> FederatedRunResult:
+        cfg = self.config
+        rng = np.random.default_rng(cfg.seed)
+        jax_rng = jax.random.key(cfg.seed)
+
+        federation_ids, recruitment = self.build_federation()
+        params = init_params
+        history: list[RoundRecord] = []
+        t_start = time.perf_counter()
+
+        for rnd in range(cfg.rounds):
+            t_round = time.perf_counter()
+            participants = select_clients(
+                rng, federation_ids, fraction=cfg.participation_fraction
+            )
+            client_params, weights, losses, steps = [], [], [], 0
+            for cid in participants:
+                client = self.all_clients[int(cid)]
+                jax_rng, sub = jax.random.split(jax_rng)
+                new_params, loss, n_c = self.trainer.train_client(params, client, rng, sub)
+                client_params.append(new_params)
+                weights.append(n_c)
+                losses.append(loss)
+                steps += self.trainer.steps_per_round(client)
+            params = aggregate(client_params, weights)
+            record = RoundRecord(
+                round_index=rnd,
+                participant_ids=[int(c) for c in participants],
+                mean_local_loss=float(np.nanmean(losses)) if losses else float("nan"),
+                local_steps=steps,
+                comm_params=2 * len(participants),
+                wall_time_s=time.perf_counter() - t_round,
+            )
+            history.append(record)
+            if progress is not None:
+                progress(record)
+
+        return FederatedRunResult(
+            params=params,
+            history=history,
+            recruitment=recruitment,
+            federation_ids=federation_ids,
+            total_wall_time_s=time.perf_counter() - t_start,
+            total_local_steps=sum(r.local_steps for r in history),
+        )

@@ -1,0 +1,52 @@
+"""Jitted public wrapper: full GRU layer = hoisted MXU matmul + Pallas scan.
+
+``interpret=True`` is forced on CPU (this container); on a real TPU the same
+call compiles the Mosaic kernel.
+
+``pallas_call`` has no reverse-mode rule, so the op carries a
+``custom_vjp``: forward runs the kernel, backward recomputes through the
+pure-jnp oracle (rematerialization — the standard pairing for hand-written
+forward kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gru_scan.kernel import gru_scan
+from repro.kernels.gru_scan.ref import gru_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.custom_vjp
+def gru_scan_op(x_gates: jnp.ndarray, w_hh: jnp.ndarray, b_hh: jnp.ndarray) -> jnp.ndarray:
+    return gru_scan(x_gates, w_hh, b_hh, interpret=not _on_tpu())
+
+
+def _fwd(x_gates, w_hh, b_hh):
+    return gru_scan_op(x_gates, w_hh, b_hh), (x_gates, w_hh, b_hh)
+
+
+def _bwd(residuals, cotangent):
+    x_gates, w_hh, b_hh = residuals
+    _, vjp = jax.vjp(gru_scan_ref, x_gates, w_hh, b_hh)
+    return vjp(cotangent)
+
+
+gru_scan_op.defvjp(_fwd, _bwd)
+
+
+def gru_sequence(
+    x: jnp.ndarray,       # (B, T, F)
+    w_ih: jnp.ndarray,    # (F, 3N)
+    w_hh: jnp.ndarray,    # (N, 3N)
+    b_ih: jnp.ndarray,    # (3N,)
+    b_hh: jnp.ndarray,    # (3N,)
+) -> jnp.ndarray:
+    """Hidden sequence (B, T, N) for one GRU layer."""
+    x_gates = x @ w_ih + b_ih  # one large MXU matmul over all timesteps
+    return gru_scan_op(x_gates, w_hh, b_hh)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused GRU recurrence kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gru_scan_ref(x_gates: jnp.ndarray, w_hh: jnp.ndarray, b_hh: jnp.ndarray) -> jnp.ndarray:
+    """x_gates: (B, T, 3N) precomputed input projections -> h_seq (B, T, N)."""
+    b, t, three_n = x_gates.shape
+    n = three_n // 3
+
+    def step(h, gx):
+        gh = h @ w_hh.astype(jnp.float32) + b_hh.astype(jnp.float32)
+        xr, xz, xn = jnp.split(gx.astype(jnp.float32), 3, axis=-1)
+        hr, hz, hn = jnp.split(gh, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        cand = jnp.tanh(xn + r * hn)
+        h_new = (1.0 - z) * cand + z * h
+        return h_new, h_new
+
+    h0 = jnp.zeros((b, n), dtype=jnp.float32)
+    _, h_seq = jax.lax.scan(step, h0, jnp.swapaxes(x_gates, 0, 1))
+    return jnp.swapaxes(h_seq, 0, 1).astype(x_gates.dtype)

@@ -1,0 +1,76 @@
+"""Jitted public wrapper for the SSD Pallas kernel.
+
+Accepts the chunked layout produced by ``repro.models.mamba2`` and forces
+interpret mode off-TPU.  ``ssd_full`` is the convenience entry point taking
+an unchunked sequence (used by tests to sweep shapes against the oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_chunk_scan as _kernel
+from repro.kernels.ssd.ref import ssd_chunk_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_h_tile(h: int) -> int:
+    for cand in (4, 2, 1):
+        if h % cand == 0:
+            return cand
+    return 1
+
+
+@jax.custom_vjp
+def ssd_chunk_scan(xc, dtc, cum, bc, cc):
+    """Chunked inputs (B, NC, L, ...) -> y (B, NC, L, H, P).
+
+    Forward: Pallas kernel.  Backward: recompute through the jnp oracle
+    (``pallas_call`` has no reverse-mode rule) — remat-style custom_vjp.
+    """
+    h = xc.shape[3]
+    return _kernel(xc, dtc, cum, bc, cc, h_tile=_pick_h_tile(h), interpret=not _on_tpu())
+
+
+def _fwd(xc, dtc, cum, bc, cc):
+    return ssd_chunk_scan(xc, dtc, cum, bc, cc), (xc, dtc, cum, bc, cc)
+
+
+def _bwd(residuals, cotangent):
+    _, vjp = jax.vjp(ssd_chunk_scan_ref, *residuals)
+    return vjp(cotangent)
+
+
+ssd_chunk_scan.defvjp(_fwd, _bwd)
+
+
+def ssd_full(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dt: jnp.ndarray,     # (B, S, H)
+    a: jnp.ndarray,      # (H,)
+    b_mat: jnp.ndarray,  # (B, S, N)
+    c_mat: jnp.ndarray,  # (B, S, N)
+    chunk: int = 64,
+) -> jnp.ndarray:
+    """Unchunked convenience wrapper: pads, chunks, runs the kernel."""
+    b, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = b_mat.reshape(b, nc, chunk, n)
+    cc = c_mat.reshape(b, nc, chunk, n)
+    dac = dtc * a[None, None, None, :]
+    cum = jnp.cumsum(dac, axis=2)
+    y = ssd_chunk_scan(xc, dtc, cum, bc, cc)
+    return y.reshape(b, nc * chunk, h, p)[:, :s]

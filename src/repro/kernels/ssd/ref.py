@@ -1,0 +1,79 @@
+"""Pure-jnp oracle for the SSD kernel: the naive per-step recurrence.
+
+    S_t = exp(dt_t A) * S_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t . S_t
+
+Run step-by-step over the *unchunked* sequence — slow but unambiguous.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dt: jnp.ndarray,     # (B, S, H)   post-softplus
+    a: jnp.ndarray,      # (H,)        negative decay rates
+    b_mat: jnp.ndarray,  # (B, S, N)
+    c_mat: jnp.ndarray,  # (B, S, N)
+) -> jnp.ndarray:
+    batch, s, h, p = x.shape
+    n = b_mat.shape[-1]
+
+    def step(state, inputs):
+        x_t, dt_t, b_t, c_t = inputs          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dt_t * a[None, :])    # (B, H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", b_t, dt_t, x_t
+        )
+        y_t = jnp.einsum("bn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    state0 = jnp.zeros((batch, h, p, n), dtype=jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        state0,
+        (
+            jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B, S, H, P)
+
+
+def ssd_chunk_scan_ref(
+    xc: jnp.ndarray,     # (B, NC, L, H, P)
+    dtc: jnp.ndarray,    # (B, NC, L, H)
+    cum: jnp.ndarray,    # (B, NC, L, H)
+    bc: jnp.ndarray,     # (B, NC, L, N)
+    cc: jnp.ndarray,     # (B, NC, L, N)
+) -> jnp.ndarray:
+    """Chunk-layout oracle mirroring the Pallas kernel's math exactly
+    (same inputs / outputs; used as its custom_vjp backward)."""
+    b, nc, l_len, h, p = xc.shape
+    idx = jnp.arange(l_len)
+    causal = idx[:, None] >= idx[None, :]
+
+    def body(state, inputs):
+        x_k, dt_k, cum_k, b_k, c_k = inputs
+        cb = jnp.einsum("bln,bmn->blm", c_k, b_k)
+        diff = cum_k[:, :, None, :] - cum_k[:, None, :, :]
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
+        w = cb[:, :, :, None] * decay * dt_k[:, None, :, :]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w, x_k)
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", c_k, state, jnp.exp(cum_k))
+        chunk_decay = jnp.exp(cum_k[:, -1, :])
+        in_decay = jnp.exp(cum_k[:, -1:, :] - cum_k) * dt_k
+        state = state * chunk_decay[:, :, None, None] + jnp.einsum(
+            "bln,blh,blhp->bhpn", b_k, in_decay, x_k
+        )
+        return state, y_intra + y_inter
+
+    f32 = lambda a: jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+    state0 = jnp.zeros((b, h, p, bc.shape[-1]), dtype=jnp.float32)
+    _, ys = jax.lax.scan(body, state0, (f32(xc), f32(dtc), f32(cum), f32(bc), f32(cc)))
+    return jnp.moveaxis(ys, 0, 1).astype(xc.dtype)

@@ -1,0 +1,262 @@
+"""Input shapes, ShapeDtypeStruct stand-ins, and sharding rules.
+
+``input_specs(cfg, shape, mesh)`` builds weak-type-correct, shardable
+ShapeDtypeStructs for every model input — nothing is allocated; the dry-run
+lowers against these.
+
+Sharding rules are path-pattern based over the params pytree (built once
+from ``jax.eval_shape`` of ``model.init``) — the same rules serve the 2-axis
+and 3-axis production meshes because unknown axis names are dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ArchType
+from repro.launch.mesh import axis_size, data_axes
+from repro.models.zoo import Model
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# input shapes (assigned)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+LONG_CONTEXT_WINDOW = 8_192
+
+
+def long_context_variant(cfg: ArchConfig) -> ArchConfig:
+    """Sub-quadratic variant for long_500k: SSM/hybrid run natively; every
+    full-attention family gets the sliding-window decode cache."""
+    if cfg.arch_type in (ArchType.SSM, ArchType.HYBRID):
+        return cfg
+    return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+
+
+def config_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    if shape.name == "long_500k":
+        return long_context_variant(cfg)
+    return cfg
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> dict[str, jax.ShapeDtypeStruct]:
+    """Training / prefill batch ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {}
+    if cfg.arch_type == ArchType.VLM:
+        text = s - cfg.num_frontend_tokens
+        specs["tokens"] = _sds((b, text), jnp.int32)
+        specs["labels"] = _sds((b, text), jnp.int32)
+        specs["patch_embeds"] = _sds((b, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    elif cfg.arch_type == ArchType.ENCDEC:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        specs["labels"] = _sds((b, s), jnp.int32)
+        specs["src_embeds"] = _sds((b, Model.encoder_frames(s), cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        specs["labels"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def decode_token_specs(cfg: ArchConfig, shape: InputShape) -> dict[str, Any]:
+    b = shape.global_batch
+    return {"tokens": _sds((b, 1), jnp.int32), "pos": _sds((), jnp.int32)}
+
+
+def cache_specs(model: Model, shape: InputShape) -> PyTree:
+    """ShapeDtypeStructs of the decode cache via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def params_specs(model: Model) -> PyTree:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+
+_LAST_DIM_MODEL = {"w_q", "w_k", "w_v", "w_gate", "w_up", "in_proj", "w_uq", "w_dq"}
+_ROW_DIM_MODEL = {"w_o", "w_down", "out_proj"}
+_REPLICATED = {
+    "scale", "b_ih", "b_hh", "conv_w", "conv_b", "A_log", "D", "dt_bias",
+    "router", "w_dkv", "w_kr", "b",
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        key = getattr(p, "key", None)
+        if key is not None:
+            names.append(str(key))
+    return names
+
+
+def param_spec(path, leaf, cfg: ArchConfig, mesh) -> P:
+    """PartitionSpec for one parameter leaf."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    ndim = len(leaf.shape)
+    model_size = axis_size(mesh, "model")
+    dsize = axis_size(mesh, "data") * axis_size(mesh, "pod")
+
+    def spec_with(axis_idx: int, axis_val) -> P:
+        spec = [None] * ndim
+        spec[axis_idx] = axis_val
+        return P(*spec)
+
+    # --- MoE expert tensors: (..., E, D, F) / (..., E, F, D) --------------
+    if cfg.moe is not None and ndim >= 3 and name in ("w_gate", "w_up", "w_down"):
+        e_axis = ndim - 3
+        if leaf.shape[e_axis] == cfg.moe.num_experts:
+            if cfg.moe.expert_sharding == "tp":
+                # shard each expert's ffn dim
+                f_axis = ndim - 2 if name == "w_down" else ndim - 1
+                if leaf.shape[f_axis] % model_size == 0:
+                    return spec_with(f_axis, "model")
+                return P()
+            # 'ep': shard experts — over (data, model) when divisible, else model
+            if leaf.shape[e_axis] % (dsize * model_size) == 0:
+                return spec_with(e_axis, ("data", "model"))
+            if leaf.shape[e_axis] % model_size == 0:
+                return spec_with(e_axis, "model")
+            return P()
+
+    if name == "embed":
+        return P("model", None) if leaf.shape[0] % model_size == 0 else P()
+    if name == "head":
+        return P(None, "model") if leaf.shape[1] % model_size == 0 else P()
+    if name in ("w_uk", "w_uv"):  # (..., R, H, dh): shard heads
+        h_axis = ndim - 2
+        if leaf.shape[h_axis] % model_size == 0:
+            return spec_with(h_axis, "model")
+        return P()
+    if name in _LAST_DIM_MODEL:
+        if leaf.shape[-1] % model_size == 0:
+            return spec_with(ndim - 1, "model")
+        return P()
+    if name in _ROW_DIM_MODEL:
+        row_axis = ndim - 2
+        if leaf.shape[row_axis] % model_size == 0:
+            return spec_with(row_axis, "model")
+        return P()
+    if name in _REPLICATED or name == "proj":
+        return P()
+    return P()
+
+
+def params_shardings(param_tree: PyTree, cfg: ArchConfig, mesh) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_tree)
+    specs = [NamedSharding(mesh, param_spec(p, l, cfg, mesh)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_shardings(batch_tree: PyTree, mesh) -> PyTree:
+    daxes = data_axes(mesh)
+    spec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    dsize = 1
+    for a in daxes:
+        dsize *= axis_size(mesh, a)
+
+    def _shard(leaf):
+        ndim = len(leaf.shape)
+        if ndim == 0 or leaf.shape[0] % dsize != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(spec, *([None] * (ndim - 1))))
+
+    return jax.tree.map(_shard, batch_tree)
+
+
+def cache_shardings(cache_tree: PyTree, cfg: ArchConfig, mesh, mode: str = "heads") -> PyTree:
+    """Decode caches: batch dim over data axes; heads/latent over model
+    when divisible.  Leaf layouts (with optional leading layer-stack dims):
+
+      GQA k/v      (..., B, S, Hkv, hd)
+      MLA c_kv     (..., B, S, R) / k_rope (..., B, S, dr)
+      SSM state    (..., B, H, P, N) / conv (..., B, K, C)
+      cross k/v    (..., B, T, Hkv, hd)
+      slot_pos     (..., S)
+    """
+    daxes = data_axes(mesh)
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    model_size = axis_size(mesh, "model")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+
+    def _spec(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        ndim = len(shape)
+        if name == "slot_pos":
+            return P()
+        # base ranks without layer stacking
+        base_rank = {
+            "k": 4, "v": 4, "cross_k": 4, "cross_v": 4,
+            "c_kv": 3, "k_rope": 3,
+            "ssm_state": 4, "conv_state": 3,
+        }.get(name)
+        if base_rank is None:
+            return P()
+        lead = ndim - base_rank               # layer-stack dims
+        spec = [None] * ndim
+        spec[lead] = dspec                    # batch dim
+        if mode == "batch":
+            # §Perf variant: shard ONLY the batch dim — avoids the
+            # head/hd-axis reshard pathology in GQA decode at the cost of
+            # replicated weights traffic
+            if shape[lead] == 1:
+                spec[lead] = None
+            return P(*spec)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            hkv_dim, hd_dim = lead + 2, lead + 3
+            if shape[hkv_dim] % model_size == 0:
+                spec[hkv_dim] = "model"
+            elif shape[hd_dim] % model_size == 0:
+                spec[hd_dim] = "model"
+        elif name == "c_kv":
+            if shape[lead + 2] % model_size == 0:
+                spec[lead + 2] = "model"
+        elif name == "ssm_state":
+            if shape[lead + 1] % model_size == 0:
+                spec[lead + 1] = "model"      # SSD heads
+        elif name == "conv_state":
+            if shape[lead + 2] % model_size == 0:
+                spec[lead + 2] = "model"      # conv channels
+        # batch=1 long-context: no data sharding possible on batch
+        if shape[lead] == 1:
+            spec[lead] = None
+        return P(*spec)
+
+    specs = [NamedSharding(mesh, _spec(p, l)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,104 @@
+"""Step functions the launcher jits: train, prefill, serve (decode).
+
+These are the functions every (architecture x input-shape x mesh) dry-run
+lowers and compiles, and the same functions the real drivers run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.zoo import Model
+from repro.optim.adamw import AdamW, apply_updates
+
+PyTree = Any
+
+
+def make_train_step(model: Model, optimizer: AdamW) -> Callable:
+    def train_step(params: PyTree, opt_state, batch: dict[str, jnp.ndarray]):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_fed_round_step(model: Model, optimizer: AdamW) -> Callable:
+    """FedAvg round as a single SPMD program (the paper's technique at
+    production scale).
+
+    Parameters and optimizer state carry an explicit leading CLIENT axis
+    (size C = number of client slots), sharded over the mesh's (pod, data)
+    axes — each slot holds one hospital silo's *diverged* replica, itself
+    tensor-sharded over ``model``.  A round is:
+
+      1. ``vmap`` over clients of ``local_steps`` optimizer steps — zero
+         cross-client communication (per-replica grads stay local);
+      2. one weighted parameter average over the client axis — FedAvg's
+         server aggregation as a single reduce+broadcast collective.
+
+    ``weights`` carry ``n_c * recruited_c``: recruitment zeroes a client's
+    contribution *before* the federation runs, which is exactly the paper's
+    pre-federation exclusion expressed in the collective.
+
+    Versus synchronous data-parallel (grad all-reduce every step), a K-local-
+    step round moves the cross-silo traffic from K x grads to 2 x params —
+    the collective-term saving quantified in EXPERIMENTS.md §Perf.
+    """
+
+    def local_loss(params, batch):
+        return model.loss(params, batch)[0]
+
+    def local_run(params, opt_state, client_batches):
+        """K purely-local steps for ONE client (vmapped over the client axis)."""
+
+        def one_step(carry, batch):
+            p, o = carry
+            loss, grads = jax.value_and_grad(local_loss)(p, batch)
+            updates, o = optimizer.update(grads, o, p)
+            return (apply_updates(p, updates), o), loss
+
+        (params, opt_state), losses = jax.lax.scan(one_step, (params, opt_state), client_batches)
+        return params, opt_state, jnp.mean(losses)
+
+    def fed_round_step(params_c, opt_state_c, batches, weights):
+        # params_c leaves: (C, ...); batches leaves: (C, K, local_batch, ...);
+        # weights: (C,) float — n_c * recruited mask.
+        params_c, opt_state_c, loss_c = jax.vmap(local_run)(params_c, opt_state_c, batches)
+
+        w = (weights / jnp.maximum(weights.sum(), 1e-9)).astype(jnp.float32)
+
+        def weighted_avg(x):
+            avg = jnp.tensordot(w.astype(x.dtype), x, axes=1)     # reduce over C
+            return jnp.broadcast_to(avg[None], x.shape)            # redistribute
+
+        params_c = jax.tree.map(weighted_avg, params_c)
+        return params_c, opt_state_c, jnp.sum(loss_c * w)
+
+    return fed_round_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """Serving prefill: hidden states for the whole prompt, logits for the
+    LAST position only (materializing (B, 32k, V) fp32 logits is never what
+    a serving system does)."""
+
+    def prefill_step(params: PyTree, batch: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        h, _ = model.hidden(params, batch)
+        last = h[:, -1, :]
+        return (last @ model._head_matrix(params)).astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """One decode step: new token for every sequence against a full cache."""
+
+    def serve_step(params: PyTree, tokens: jnp.ndarray, cache: PyTree, pos: jnp.ndarray):
+        return model.decode_step(params, tokens, cache, pos)
+
+    return serve_step

@@ -1,0 +1,105 @@
+"""Training driver.
+
+Two modes:
+
+  * ``paper`` (default) — the paper's experiments on the synthetic eICU
+    cohort: central / federated with and without client recruitment.
+  * ``lm`` — single-process smoke training of any assigned architecture's
+    *reduced* variant on synthetic tokens (sanity path for the zoo; the
+    full configs only ever lower through dryrun.py on this CPU container).
+
+Examples::
+
+    python -m repro.launch.train --setting federated-src --scale 0.2 --seeds 0 1 2
+    python -m repro.launch.train --mode lm --arch smollm-135m --steps 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.experiments.paper import MODEL_SETTINGS, ExperimentConfig, run_seeds
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def run_paper(args) -> None:
+    exp = ExperimentConfig(
+        cohort_scale=args.scale,
+        rounds=args.rounds,
+        gamma_th=args.gamma_th,
+        use_pallas=args.pallas,
+    )
+    agg = run_seeds(args.setting, exp, seeds=args.seeds)
+    print(json.dumps({k: v for k, v in agg.items() if k != "runs"}, indent=2))
+    out = RESULTS_DIR / "paper" / f"{args.setting}_scale{args.scale}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(agg, indent=1))
+    print(f"saved -> {out}")
+
+
+def run_lm(args) -> None:
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import lm_token_batch
+    from repro.launch.steps import make_train_step
+    from repro.models.zoo import Model
+    from repro.optim.adamw import AdamW
+
+    cfg = get_config(args.arch).reduced()
+    model = Model(cfg, remat=False)
+    optimizer = AdamW(learning_rate=1e-3)
+    params = model.init(jax.random.key(args.seed))
+    opt_state = optimizer.init(params)
+    step = jax.jit(make_train_step(model, optimizer))
+    rng = np.random.default_rng(args.seed)
+
+    from repro.configs.base import ArchType
+
+    for i in range(args.steps):
+        batch = lm_token_batch(rng, args.batch, args.seq, cfg.vocab_size)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.arch_type == ArchType.VLM:
+            batch["patch_embeds"] = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.num_frontend_tokens, cfg.d_model)), jnp.float32
+            )
+        if cfg.arch_type == ArchType.ENCDEC:
+            batch["src_embeds"] = jnp.asarray(
+                rng.normal(size=(args.batch, max(args.seq // 4, 8), cfg.d_model)), jnp.float32
+            )
+        params, opt_state, metrics = step(params, opt_state, batch)
+        print(f"step {i}: loss={float(metrics['loss']):.4f}")
+    print("lm smoke training done")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=["paper", "lm"], default="paper")
+    # paper mode
+    ap.add_argument("--setting", choices=list(MODEL_SETTINGS), default="federated-src")
+    ap.add_argument("--scale", type=float, default=1.0, help="cohort scale (1.0 = full)")
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--gamma-th", type=float, default=0.1)
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
+    ap.add_argument("--pallas", action="store_true")
+    # lm mode
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.mode == "paper":
+        run_paper(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

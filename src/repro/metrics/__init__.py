@@ -1,0 +1,12 @@
+from repro.metrics.regression import evaluate_predictions, mae, mape, mse, msle
+from repro.metrics.stats import welch_t_test, significance_stars
+
+__all__ = [
+    "evaluate_predictions",
+    "mae",
+    "mape",
+    "mse",
+    "msle",
+    "welch_t_test",
+    "significance_stars",
+]

@@ -1,0 +1,314 @@
+"""Attention layers: GQA (qk-norm, sliding-window) and DeepSeek MLA.
+
+Long-sequence prefill uses a flash-style *blockwise* attention (lax.scan over
+KV chunks with an online softmax) so the S x S score matrix is never
+materialized — at 32k prefill that is the difference between ~MBs and ~TBs
+of activation memory per chip.
+
+Decode paths operate on explicit caches:
+  * GQA: ring-buffer KV cache (full-window or sliding-window);
+  * MLA: the compressed latent cache (c_kv + shared k_rope) with the
+    weight-absorption trick, which is the whole point of MLA at decode time.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+PyTree = Any
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# blockwise (flash-style) attention core
+# ==========================================================================
+
+def blockwise_attention(
+    q: jnp.ndarray,          # (B, S, H, Dk)
+    k: jnp.ndarray,          # (B, S, Hkv, Dk)
+    v: jnp.ndarray,          # (B, S, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_chunk: int = 1024,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Memory-bounded attention with online softmax.  Returns (B, S, H, Dv).
+
+    GQA is handled by reshaping H query heads into (Hkv, group) — no KV
+    repetition in memory.
+    """
+    b, s, h, dk = q.shape
+    t = k.shape[1]                            # KV length (== s for self-attn)
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    scale = dk ** -0.5 if scale is None else scale
+
+    kv_chunk = min(kv_chunk, t)
+    num_chunks = -(-t // kv_chunk)
+    pad = num_chunks * kv_chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, s, hkv, group, dk)
+    kf = k.astype(jnp.float32).reshape(b, num_chunks, kv_chunk, hkv, dk)
+    vf = v.astype(jnp.float32).reshape(b, num_chunks, kv_chunk, hkv, dv)
+
+    q_pos = jnp.arange(s)
+
+    def body(carry, inputs):
+        m, l, acc = carry                     # (B,S,Hkv,G), same, (B,S,Hkv,G,Dv)
+        k_c, v_c, c_idx = inputs              # (B,C,Hkv,Dk), (B,C,Hkv,Dv), ()
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        #        b=batch s=q h=kv-heads g=group c=kv-chunk d=dk
+        scores = jnp.einsum("bshgd,bchd->bshgc", qf, k_c)
+        mask = jnp.broadcast_to(kv_pos[None, :] < t, (s, kv_chunk))  # pad mask
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        mask_b = mask[None, :, None, None, :]
+        scores = jnp.where(mask_b, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        # explicit mask multiply: a fully-masked chunk must contribute 0,
+        # not exp(NEG_INF - NEG_INF) = 1
+        p = jnp.exp(scores - m_new[..., None]) * mask_b
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bshgc,bchd->bshgd", p, v_c)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, hkv, group), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, s, hkv, group), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, s, hkv, group, dv), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (
+            jnp.moveaxis(kf, 1, 0),
+            jnp.moveaxis(vf, 1, 0),
+            jnp.arange(num_chunks),
+        ),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, h, dv).astype(q.dtype)
+
+
+# ==========================================================================
+# GQA attention layer
+# ==========================================================================
+
+def gqa_init(key: jax.Array, cfg: ArchConfig, dtype) -> PyTree:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "w_q": dense_init(k1, cfg.d_model, cfg.num_heads * hd, dtype),
+        "w_k": dense_init(k2, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "w_v": dense_init(k3, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "w_o": dense_init(k4, cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = rmsnorm_init(hd, dtype)
+        params["k_norm"] = rmsnorm_init(hd, dtype)
+    return params
+
+
+def _project_qkv(params: PyTree, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ params["w_k"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ params["w_v"]).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(
+    params: PyTree,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    *,
+    causal: bool = True,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill).  x: (B, S, D)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = blockwise_attention(
+        q, k, v, causal=causal, window=cfg.sliding_window, kv_chunk=kv_chunk
+    )
+    return out.reshape(b, s, -1) @ params["w_o"]
+
+
+# --- decode cache ---------------------------------------------------------
+
+def gqa_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype) -> PyTree:
+    """Ring-buffer cache.  With a sliding window the buffer is window-sized."""
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype=dtype),
+        "slot_pos": jnp.full((size,), -1, dtype=jnp.int32),
+    }
+
+
+def gqa_decode(
+    params: PyTree,
+    cfg: ArchConfig,
+    x: jnp.ndarray,          # (B, 1, D) — one new token
+    cache: PyTree,
+    pos: jnp.ndarray,        # scalar int32 — absolute position of the new token
+) -> tuple[jnp.ndarray, PyTree]:
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    size = cache["k"].shape[1]
+    slot = pos % size
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    slot_pos = cache["slot_pos"].at[slot].set(pos)
+
+    group = cfg.num_heads // cfg.num_kv_heads
+    qf = (q.astype(jnp.float32) * hd**-0.5).reshape(b, cfg.num_kv_heads, group, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.sliding_window is not None:
+        valid = valid & (slot_pos > pos - cfg.sliding_window)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", attn, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.num_heads * hd).astype(x.dtype)
+    new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+    return out @ params["w_o"], new_cache
+
+
+# ==========================================================================
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ==========================================================================
+
+def mla_init(key: jax.Array, cfg: ArchConfig, dtype) -> PyTree:
+    m: MLAConfig = cfg.mla
+    h = cfg.num_heads
+    keys = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(keys[0], cfg.d_model, m.q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "w_uq": dense_init(
+            keys[1], m.q_lora_rank, h * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype
+        ),
+        "w_dkv": dense_init(keys[2], cfg.d_model, m.kv_lora_rank, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_kr": dense_init(keys[3], cfg.d_model, m.qk_rope_head_dim, dtype),
+        # stored (rank, H, head_dim) so decode can absorb them per head
+        "w_uk": (
+            jax.random.truncated_normal(keys[4], -2, 2, (m.kv_lora_rank, h, m.qk_nope_head_dim))
+            * m.kv_lora_rank**-0.5
+        ).astype(dtype),
+        "w_uv": (
+            jax.random.truncated_normal(keys[5], -2, 2, (m.kv_lora_rank, h, m.v_head_dim))
+            * m.kv_lora_rank**-0.5
+        ).astype(dtype),
+        "w_o": dense_init(keys[6], h * m.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def _mla_queries(params: PyTree, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray):
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    c_q = rmsnorm(params["q_norm"], x @ params["w_dq"], cfg.norm_eps)
+    q = (c_q @ params["w_uq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(
+    params: PyTree, cfg: ArchConfig, x: jnp.ndarray, *, kv_chunk: int = 1024
+) -> jnp.ndarray:
+    """Train / prefill MLA with full-rank keys/values (standard formulation)."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _mla_queries(params, cfg, x, positions)
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)   # (B,S,R)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uv"])
+
+    # fold the shared rope key into every head and run one blockwise attention
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = blockwise_attention(q, k, v, causal=True, kv_chunk=kv_chunk, scale=scale)
+    return out.reshape(b, s, h * m.v_head_dim) @ params["w_o"]
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype) -> PyTree:
+    m: MLAConfig = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype=dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype=dtype),
+    }
+
+
+def mla_decode(
+    params: PyTree,
+    cfg: ArchConfig,
+    x: jnp.ndarray,          # (B, 1, D)
+    cache: PyTree,
+    pos: jnp.ndarray,
+) -> tuple[jnp.ndarray, PyTree]:
+    """Weight-absorbed decode over the compressed latent cache.
+
+    Scores  = q_nope W_uk . c_kv  +  q_rope . k_rope     (per head)
+    Output  = (attn . c_kv) W_uv                          (per head)
+    Only (kv_lora_rank + rope_dim) floats per token are cached.
+    """
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_queries(params, cfg, x, positions)    # (B,1,H,*)
+
+    c_kv_new = rmsnorm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)
+    k_rope_new = apply_rope((x @ params["w_kr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1
+    )
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    # absorb W_uk: query in latent space (B,H,R)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), params["w_uk"].astype(jnp.float32))
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv.astype(jnp.float32))
+    scores += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32), k_rope.astype(jnp.float32))
+    scores *= scale
+    mask = jnp.arange(c_kv.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, :], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", attn, c_kv.astype(jnp.float32))   # (B,H,R)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, params["w_uv"].astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return out @ params["w_o"], {"c_kv": c_kv, "k_rope": k_rope}

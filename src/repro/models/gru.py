@@ -1,0 +1,132 @@
+"""The paper's model: stacked GRU + single ReLU-headed FCN for LoS regression.
+
+Paper Table 1: L=2 layers, N=32 hidden, dropout r=0.05, batch 128,
+AdamW(lr=5e-3, wd=5e-3), loss = MSLE.  Eq. (1)-(2) define the cell and the
+strictly-positive output head (a patient cannot have negative LoS).
+
+Implemented as explicit pytrees + ``jax.lax.scan`` over time.  When
+``use_pallas`` is set, the recurrence runs through the fused Pallas TPU
+kernel in ``repro.kernels.gru_scan`` (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUConfig:
+    input_dim: int = 38
+    hidden_dim: int = 32
+    num_layers: int = 2
+    dropout: float = 0.05
+    use_pallas: bool = False
+
+
+def init_gru(key: jax.Array, cfg: GRUConfig) -> PyTree:
+    """Glorot-ish init matching torch.nn.GRU defaults (U(-1/sqrt(N), 1/sqrt(N)))."""
+    params: dict[str, Any] = {"layers": []}
+    scale = 1.0 / jnp.sqrt(cfg.hidden_dim)
+    for layer in range(cfg.num_layers):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        in_dim = cfg.input_dim if layer == 0 else cfg.hidden_dim
+        params["layers"].append(
+            {
+                "w_ih": jax.random.uniform(k1, (in_dim, 3 * cfg.hidden_dim), minval=-scale, maxval=scale),
+                "w_hh": jax.random.uniform(k2, (cfg.hidden_dim, 3 * cfg.hidden_dim), minval=-scale, maxval=scale),
+                "b_ih": jax.random.uniform(k3, (3 * cfg.hidden_dim,), minval=-scale, maxval=scale),
+                "b_hh": jax.random.uniform(k4, (3 * cfg.hidden_dim,), minval=-scale, maxval=scale),
+            }
+        )
+    key, k_head = jax.random.split(key)
+    params["head"] = {
+        "w": jax.random.uniform(k_head, (cfg.hidden_dim, 1), minval=-scale, maxval=scale),
+        "b": jnp.zeros((1,)),
+    }
+    return params
+
+
+def gru_cell(layer: PyTree, x_t: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (1).  x_t: (B, F), h: (B, N) -> new h."""
+    gates_x = x_t @ layer["w_ih"] + layer["b_ih"]          # (B, 3N)
+    gates_h = h @ layer["w_hh"] + layer["b_hh"]            # (B, 3N)
+    xr, xz, xn = jnp.split(gates_x, 3, axis=-1)
+    hr, hz, hn = jnp.split(gates_h, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    return (1.0 - z) * n + z * h
+
+
+def _layer_scan(layer: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    """Run one GRU layer over time.  x: (B, T, F) -> hidden seq (B, T, N)."""
+    batch = x.shape[0]
+    hidden = layer["w_hh"].shape[0]
+    h0 = jnp.zeros((batch, hidden), dtype=x.dtype)
+
+    def step(h, x_t):
+        h = gru_cell(layer, x_t, h)
+        return h, h
+
+    _, h_seq = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(h_seq, 0, 1)
+
+
+def _layer_scan_pallas(layer: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.kernels.gru_scan import ops as gru_ops
+
+    return gru_ops.gru_sequence(
+        x, layer["w_ih"], layer["w_hh"], layer["b_ih"], layer["b_hh"]
+    )
+
+
+def gru_apply(
+    params: PyTree,
+    cfg: GRUConfig,
+    x: jnp.ndarray,
+    *,
+    train: bool = False,
+    rng: jax.Array | None = None,
+) -> jnp.ndarray:
+    """x: (B, T, F) -> predicted LoS (B,), strictly non-negative (eq. 2)."""
+    h = x
+    for i, layer in enumerate(params["layers"]):
+        run = _layer_scan_pallas if cfg.use_pallas else _layer_scan
+        h = run(layer, h)
+        if train and cfg.dropout > 0.0 and i < len(params["layers"]) - 1:
+            assert rng is not None, "dropout requires an rng in train mode"
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(sub, 1.0 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - cfg.dropout), 0.0)
+    h_final = h[:, -1, :]  # prediction from the final hidden state (24th hour)
+    y_hat = jax.nn.relu(h_final @ params["head"]["w"] + params["head"]["b"])
+    return y_hat[:, 0]
+
+
+def msle_loss(y: jnp.ndarray, y_hat: jnp.ndarray, mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Paper eq. (6): mean squared logarithmic error."""
+    err = (jnp.log1p(y) - jnp.log1p(y_hat)) ** 2
+    if mask is None:
+        return jnp.mean(err)
+    return jnp.sum(err * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: GRUConfig):
+    """loss(params, batch=(x, y, mask), rng) for training loops."""
+
+    def loss_fn(params, batch, rng=None):
+        x, y, mask = batch
+        y_hat = gru_apply(params, cfg, x, train=rng is not None, rng=rng)
+        return msle_loss(y, y_hat, mask)
+
+    return loss_fn
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

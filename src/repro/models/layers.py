@@ -1,0 +1,101 @@
+"""Shared neural-net building blocks (pure JAX, explicit pytrees).
+
+Initializers return dict pytrees; apply functions are free functions so the
+whole zoo stays functional and scan/pjit friendly.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Activation
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    scale = in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: PyTree, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs         # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# feed-forward variants
+# --------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, activation: Activation, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation == Activation.SWIGLU:
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params: PyTree, x: jnp.ndarray, activation: Activation) -> jnp.ndarray:
+    if activation == Activation.SWIGLU:
+        gate = jax.nn.silu(x @ params["w_gate"])
+        return (gate * (x @ params["w_up"])) @ params["w_down"]
+    h = x @ params["w_up"]
+    if activation == Activation.RELU2:
+        h = jnp.square(jax.nn.relu(h))     # Nemotron-4 squared ReLU
+    elif activation == Activation.GELU:
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return h @ params["w_down"]
+
+
+def mlp_param_count(d_model: int, d_ff: int, activation: Activation) -> int:
+    return d_model * d_ff * (3 if activation == Activation.SWIGLU else 2)

@@ -1,0 +1,243 @@
+"""Mamba2 (state-space duality / SSD) block — arXiv:2405.21060.
+
+The SSD layer computes, per head h with per-step decay ``a_t = exp(dt_t A)``::
+
+    S_t = a_t * S_{t-1} + dt_t * B_t x_t^T          (state:  (head_dim, N))
+    y_t = C_t . S_t + D * x_t
+
+Training/prefill uses the *chunked* dual form: within a chunk of length L the
+quadratic "attention" form (C B^T ⊙ decay) is used; across chunks the state
+recurrence is carried by a ``lax.scan``.  Scanning chunk-by-chunk keeps the
+(L x L) score tensor bounded to one chunk at a time — at 4k train with 256
+global batch a fully vectorized form would materialize TBs.
+
+Decode is the O(1) recurrence on a cached state.  A depthwise causal conv
+(width 4) precedes the SSM as in the reference implementation; its decode
+cache holds the last (d_conv - 1) inputs.
+
+``use_pallas`` routes the chunk computation through the Pallas SSD kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+PyTree = Any
+
+
+def mamba2_init(key: jax.Array, cfg: ArchConfig, dtype) -> PyTree:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nheads = s.num_heads(d)
+    conv_dim = d_in + 2 * s.d_state  # x, B, C all go through the conv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt]
+    proj_out = 2 * d_in + 2 * s.d_state + nheads
+    return {
+        "in_proj": dense_init(k1, d, proj_out, dtype),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), dtype=jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(k3, d_in, d, dtype),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nheads = s.num_heads(cfg.d_model)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * s.d_state], axis=-1)
+    assert dt.shape[-1] == nheads
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time.  xbc: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_chunk_scan(
+    x: jnp.ndarray,    # (B, S, H, P)  fp32
+    dt: jnp.ndarray,   # (B, S, H)     fp32, post-softplus
+    A: jnp.ndarray,    # (H,)          fp32, negative
+    B_mat: jnp.ndarray,  # (B, S, N)
+    C_mat: jnp.ndarray,  # (B, S, N)
+    chunk: int,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    b, s, h, p = x.shape
+    n = B_mat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B_mat.reshape(b, nc, chunk, n)
+    Cc = C_mat.reshape(b, nc, chunk, n)
+
+    dA = dtc * A[None, None, None, :]              # (b, nc, L, h), <= 0
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumulative decay
+
+    if use_pallas:
+        from repro.kernels.ssd import ops as ssd_ops
+
+        y = ssd_ops.ssd_chunk_scan(xc, dtc, cum, Bc, Cc)   # (b, nc, L, h, p)
+        return y.reshape(b, nc * chunk, h, p)[:, :s]
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]          # (L, L)
+
+    def body(state, inputs):
+        # state: (b, h, p, n)
+        x_k, dt_k, cum_k, b_k, c_k = inputs
+        # intra-chunk quadratic form.  Mask INSIDE the exponent: the i<j
+        # entries of (cum_i - cum_j) are large positive and would overflow
+        # exp, poisoning the backward pass with inf * 0 = NaN.
+        cb = jnp.einsum("bln,bmn->blm", c_k, b_k)                     # (b, L, L)
+        diff = cum_k[:, :, None, :] - cum_k[:, None, :, :]            # (b, L, L, h)
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
+        w = cb[:, :, :, None] * decay * dt_k[:, None, :, :]           # (b, L, L, h)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w, x_k)
+        # contribution of the carried state
+        state_decay = jnp.exp(cum_k)                                  # (b, L, h)
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", c_k, state, state_decay)
+        # update the carried state
+        chunk_decay = jnp.exp(cum_k[:, -1, :])                        # (b, h)
+        in_decay = jnp.exp(cum_k[:, -1:, :] - cum_k) * dt_k           # (b, L, h)
+        new_state = state * chunk_decay[:, :, None, None] + jnp.einsum(
+            "bln,blh,blhp->bhpn", b_k, in_decay, x_k
+        )
+        return new_state, y_intra + y_inter
+
+    state0 = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    _, ys = jax.lax.scan(
+        body,
+        state0,
+        (
+            jnp.moveaxis(xc, 1, 0),
+            jnp.moveaxis(dtc, 1, 0),
+            jnp.moveaxis(cum, 1, 0),
+            jnp.moveaxis(Bc, 1, 0),
+            jnp.moveaxis(Cc, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, p)
+    return y[:, :s]
+
+
+def mamba2_apply(
+    params: PyTree, cfg: ArchConfig, u: jnp.ndarray, *, use_pallas: bool = False
+) -> jnp.ndarray:
+    """Full-sequence SSD block.  u: (B, S, D) -> (B, S, D)."""
+    s_cfg: SSMConfig = cfg.ssm
+    b, s, d = u.shape
+    d_in = s_cfg.d_inner(d)
+    nheads = s_cfg.num_heads(d)
+
+    proj = u @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x_in, B_mat, C_mat = jnp.split(xbc, [d_in, d_in + s_cfg.d_state], axis=-1)
+
+    x_heads = x_in.reshape(b, s, nheads, s_cfg.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y = _ssd_chunk_scan(
+        x_heads, dt, A, B_mat.astype(jnp.float32), C_mat.astype(jnp.float32),
+        s_cfg.chunk_size, use_pallas=use_pallas,
+    )
+    y = y + x_heads * params["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+# --------------------------------------------------------------------------
+# decode (O(1) state update)
+# --------------------------------------------------------------------------
+
+def mamba2_cache_init(cfg: ArchConfig, batch: int, dtype) -> PyTree:
+    s: SSMConfig = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nheads = s.num_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        "ssm_state": jnp.zeros((batch, nheads, s.head_dim, s.d_state), dtype=jnp.float32),
+        "conv_state": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype=dtype),
+    }
+
+
+def mamba2_decode(
+    params: PyTree, cfg: ArchConfig, u: jnp.ndarray, cache: PyTree
+) -> tuple[jnp.ndarray, PyTree]:
+    """One-token SSD step.  u: (B, 1, D)."""
+    s_cfg: SSMConfig = cfg.ssm
+    b, _, d = u.shape
+    d_in = s_cfg.d_inner(d)
+    nheads = s_cfg.num_heads(d)
+
+    proj = u[:, 0, :] @ params["in_proj"]
+    z, xbc_new, dt_raw = _split_proj(proj, cfg)
+
+    # causal conv over [cached inputs, new input]
+    conv_in = jnp.concatenate(
+        [cache["conv_state"], xbc_new[:, None, :].astype(cache["conv_state"].dtype)], axis=1
+    )  # (B, d_conv, C)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_in, params["conv_w"]) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv_state = conv_in[:, 1:, :]
+
+    x_in, B_mat, C_mat = jnp.split(xbc, [d_in, d_in + s_cfg.d_state], axis=-1)
+    x_h = x_in.reshape(b, nheads, s_cfg.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])                                      # (B, H)
+
+    state = cache["ssm_state"]
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", B_mat.astype(jnp.float32), dt, x_h
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C_mat.astype(jnp.float32), state)
+    y = y + x_h * params["D"][None, :, None]
+    y = y.reshape(b, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y[:, None, :], cfg.norm_eps)[:, 0]
+    out = y @ params["out_proj"]
+    return out[:, None, :], {"ssm_state": state, "conv_state": new_conv_state}
+
+
+def mamba2_param_count(cfg: ArchConfig) -> int:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nheads = s.num_heads(d)
+    conv_dim = d_in + 2 * s.d_state
+    proj_out = 2 * d_in + 2 * s.d_state + nheads
+    return (
+        d * proj_out
+        + s.d_conv * conv_dim + conv_dim
+        + 3 * nheads
+        + d_in            # norm
+        + d_in * d        # out_proj
+    )

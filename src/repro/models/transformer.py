@@ -1,0 +1,271 @@
+"""Transformer blocks and scan-over-layers stacks for every assigned family.
+
+All per-layer parameters are *stacked* on a leading layer dimension and run
+through ``jax.lax.scan`` — this keeps the HLO size O(1) in depth (critical
+for compiling 61-layer/671B configs on the CPU dry-run) and gives XLA a
+single layer body to schedule.  Training bodies are wrapped in
+``jax.checkpoint`` (full remat per layer) so activation memory is O(layers)
+in checkpoints, not intermediates.
+
+Block kinds:
+  * ``dense``  — [MLA | GQA] attention + [swiglu | relu2 | gelu] MLP
+  * ``moe``    — attention + sort-dispatch MoE (+ shared experts)
+  * ``mamba``  — Mamba2 SSD block
+  * ``enc``    — bidirectional attention + MLP (audio encoder)
+  * ``dec``    — causal self-attention + cross-attention + MLP
+Hybrid (Zamba2) runs groups of mamba blocks with one weight-*shared*
+attention block applied between groups.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ArchType
+from repro.models.attention import (
+    blockwise_attention,
+    gqa_apply,
+    gqa_cache_init,
+    gqa_decode,
+    gqa_init,
+    mla_apply,
+    mla_cache_init,
+    mla_decode,
+    mla_init,
+)
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from repro.models.mamba2 import (
+    mamba2_apply,
+    mamba2_cache_init,
+    mamba2_decode,
+    mamba2_init,
+)
+from repro.models.moe import moe_apply, moe_init
+
+PyTree = Any
+
+
+def stack_init(init_fn: Callable[..., PyTree], key: jax.Array, n: int) -> PyTree:
+    """Initialize ``n`` copies of a block with stacked (leading-dim) leaves."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ==========================================================================
+# block init / apply
+# ==========================================================================
+
+def _self_attn_init(key: jax.Array, cfg: ArchConfig, dtype) -> PyTree:
+    if cfg.mla is not None:
+        return mla_init(key, cfg, dtype)
+    return gqa_init(key, cfg, dtype)
+
+
+def _self_attn_apply(params: PyTree, cfg: ArchConfig, x: jnp.ndarray, *, causal=True) -> jnp.ndarray:
+    if cfg.mla is not None:
+        return mla_apply(params, cfg, x)
+    return gqa_apply(params, cfg, x, causal=causal)
+
+
+def _self_attn_decode(params, cfg, x, cache, pos):
+    if cfg.mla is not None:
+        return mla_decode(params, cfg, x, cache, pos)
+    return gqa_decode(params, cfg, x, cache, pos)
+
+
+def _self_attn_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype) -> PyTree:
+    if cfg.mla is not None:
+        return mla_cache_init(cfg, batch, max_len, dtype)
+    return gqa_cache_init(cfg, batch, max_len, dtype)
+
+
+def dense_block_init(key: jax.Array, cfg: ArchConfig, dtype, *, use_moe: bool) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    params = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": _self_attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if use_moe:
+        params["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        params["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return params
+
+
+def dense_block_apply(
+    params: PyTree, cfg: ArchConfig, x: jnp.ndarray, *, use_moe: bool, causal: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    h = x + _self_attn_apply(params["attn"], cfg, rmsnorm(params["ln1"], x, cfg.norm_eps), causal=causal)
+    ff_in = rmsnorm(params["ln2"], h, cfg.norm_eps)
+    if use_moe:
+        ff, aux = moe_apply(params["moe"], cfg, ff_in)
+    else:
+        ff, aux = mlp_apply(params["mlp"], ff_in, cfg.activation), jnp.zeros((), jnp.float32)
+    return h + ff, aux
+
+
+def dense_block_decode(
+    params: PyTree, cfg: ArchConfig, x: jnp.ndarray, cache: PyTree, pos, *, use_moe: bool
+) -> tuple[jnp.ndarray, PyTree]:
+    attn_out, new_cache = _self_attn_decode(params["attn"], cfg, rmsnorm(params["ln1"], x, cfg.norm_eps), cache, pos)
+    h = x + attn_out
+    ff_in = rmsnorm(params["ln2"], h, cfg.norm_eps)
+    if use_moe:
+        ff, _ = moe_apply(params["moe"], cfg, ff_in)
+    else:
+        ff = mlp_apply(params["mlp"], ff_in, cfg.activation)
+    return h + ff, new_cache
+
+
+def mamba_block_init(key: jax.Array, cfg: ArchConfig, dtype) -> PyTree:
+    return {"ln": rmsnorm_init(cfg.d_model, dtype), "mamba": mamba2_init(key, cfg, dtype)}
+
+
+def mamba_block_apply(params, cfg, x, *, use_pallas=False):
+    return x + mamba2_apply(params["mamba"], cfg, rmsnorm(params["ln"], x, cfg.norm_eps), use_pallas=use_pallas)
+
+
+def mamba_block_decode(params, cfg, x, cache, _pos):
+    out, new_cache = mamba2_decode(params["mamba"], cfg, rmsnorm(params["ln"], x, cfg.norm_eps), cache)
+    return x + out, new_cache
+
+
+# --- cross attention (encoder-decoder) ------------------------------------
+
+def cross_attn_init(key: jax.Array, cfg: ArchConfig, dtype) -> PyTree:
+    return gqa_init(key, cfg, dtype)
+
+
+def cross_attn_apply(params: PyTree, cfg: ArchConfig, x: jnp.ndarray, enc: jnp.ndarray) -> jnp.ndarray:
+    b, s, _ = x.shape
+    t = enc.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(b, s, cfg.num_heads, hd)
+    k = (enc @ params["w_k"]).reshape(b, t, cfg.num_kv_heads, hd)
+    v = (enc @ params["w_v"]).reshape(b, t, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    out = blockwise_attention(q, k, v, causal=False)
+    return out.reshape(b, s, -1) @ params["w_o"]
+
+
+def cross_attn_decode(
+    params: PyTree, cfg: ArchConfig, x: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray
+) -> jnp.ndarray:
+    """Decode-time cross attention over precomputed encoder K/V."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    group = cfg.num_heads // cfg.num_kv_heads
+    q = (x @ params["w_q"]).reshape(b, cfg.num_kv_heads, group, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    qf = q.astype(jnp.float32) * hd**-0.5
+    scores = jnp.einsum("bhgd,bthd->bhgt", qf, k_cache.astype(jnp.float32))
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", attn, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, cfg.num_heads * hd).astype(x.dtype) @ params["w_o"]
+
+
+def dec_block_init(key: jax.Array, cfg: ArchConfig, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": _self_attn_init(k1, cfg, dtype),
+        "ln_x": rmsnorm_init(cfg.d_model, dtype),
+        "cross": cross_attn_init(k2, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def dec_block_apply(params, cfg, x, enc):
+    h = x + _self_attn_apply(params["attn"], cfg, rmsnorm(params["ln1"], x, cfg.norm_eps), causal=True)
+    h = h + cross_attn_apply(params["cross"], cfg, rmsnorm(params["ln_x"], h, cfg.norm_eps), enc)
+    return h + mlp_apply(params["mlp"], rmsnorm(params["ln2"], h, cfg.norm_eps), cfg.activation)
+
+
+def dec_block_decode(params, cfg, x, cache, pos):
+    attn_out, self_cache = _self_attn_decode(
+        params["attn"], cfg, rmsnorm(params["ln1"], x, cfg.norm_eps), cache["self"], pos
+    )
+    h = x + attn_out
+    h = h + cross_attn_decode(
+        params["cross"], cfg, rmsnorm(params["ln_x"], h, cfg.norm_eps), cache["cross_k"], cache["cross_v"]
+    )
+    h = h + mlp_apply(params["mlp"], rmsnorm(params["ln2"], h, cfg.norm_eps), cfg.activation)
+    return h, {"self": self_cache, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+
+
+# ==========================================================================
+# stacks (scan over layers)
+# ==========================================================================
+
+def run_stack(
+    stack_params: PyTree,
+    x: jnp.ndarray,
+    body: Callable[[PyTree, jnp.ndarray], tuple[jnp.ndarray, jnp.ndarray]],
+    *,
+    remat: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan ``body(layer_params, x) -> (x, aux)`` over stacked layers."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def scan_body(carry, layer_params):
+        x, aux = carry
+        x, a = fn(layer_params, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)), stack_params)
+    return x, aux
+
+
+def run_stack_decode(
+    stack_params: PyTree,
+    caches: PyTree,
+    x: jnp.ndarray,
+    body: Callable[[PyTree, jnp.ndarray, PyTree], tuple[jnp.ndarray, PyTree]],
+) -> tuple[jnp.ndarray, PyTree]:
+    def scan_body(x, inputs):
+        layer_params, cache = inputs
+        x, new_cache = body(layer_params, x, cache)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x, (stack_params, caches))
+    return x, new_caches
+
+
+# ==========================================================================
+# layer layout per architecture
+# ==========================================================================
+
+def moe_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(num leading dense layers, num moe layers, num trailing dense layers
+    interleaved) — as (first_dense, n_moe, n_inter_dense)."""
+    m = cfg.moe
+    rest = cfg.num_layers - m.first_dense
+    if m.moe_every == 1:
+        return m.first_dense, rest, 0
+    n_pairs = rest // m.moe_every
+    n_moe = n_pairs
+    n_inter = rest - n_pairs
+    return m.first_dense, n_moe, n_inter
+
+
+def hybrid_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(num groups, mamba per group, trailing mamba layers)."""
+    period = cfg.hybrid.attn_every
+    groups = cfg.num_layers // period
+    return groups, period - 1, cfg.num_layers - groups * period

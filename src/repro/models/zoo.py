@@ -1,0 +1,552 @@
+"""Unified model API over every assigned architecture family.
+
+``Model(cfg)`` exposes the functional surface the launcher, trainer, and
+server consume::
+
+    params = model.init(key)
+    loss, aux = model.loss(params, batch)                  # train
+    logits = model.forward_logits(params, batch)           # prefill
+    cache  = model.init_cache(batch_size, max_len)
+    logits, cache = model.decode_step(params, tok, cache, pos)   # serve
+
+Batches are dicts: ``tokens``/``labels`` (B, S) int32 plus, per modality,
+``patch_embeds`` (VLM) or ``src_embeds`` (audio enc-dec) — the stub frontends
+per the harness carve-out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Activation, ArchConfig, ArchType
+from repro.distribution.sharding import DATA, MODEL, constrain
+from repro.models.attention import gqa_cache_init
+from repro.models.layers import dense_init, embed_init, mlp_param_count, rmsnorm, rmsnorm_init
+from repro.models.mamba2 import mamba2_cache_init, mamba2_param_count
+from repro.models.moe import moe_param_count
+from repro.models.transformer import (
+    _self_attn_cache_init,
+    dec_block_apply,
+    dec_block_decode,
+    dec_block_init,
+    dense_block_apply,
+    dense_block_decode,
+    dense_block_init,
+    hybrid_layout,
+    mamba_block_apply,
+    mamba_block_decode,
+    mamba_block_init,
+    moe_layout,
+    run_stack,
+    run_stack_decode,
+    stack_init,
+)
+
+PyTree = Any
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    use_pallas: bool = False
+    remat: bool = True
+    loss_chunk: int = 512  # sequence chunk for the memory-bounded CE
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> PyTree:
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        key, k_embed, k_head, k_body = jax.random.split(key, 4)
+        params: dict[str, Any] = {
+            "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+            "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+
+        at = cfg.arch_type
+        if at in (ArchType.DENSE, ArchType.VLM):
+            params["blocks"] = stack_init(
+                lambda k: dense_block_init(k, cfg, dtype, use_moe=False), k_body, cfg.num_layers
+            )
+        elif at == ArchType.MOE:
+            first, n_moe, n_inter = moe_layout(cfg)
+            k1, k2, k3 = jax.random.split(k_body, 3)
+            if first:
+                params["first_blocks"] = stack_init(
+                    lambda k: dense_block_init(k, cfg, dtype, use_moe=False), k1, first
+                )
+            if cfg.moe.moe_every == 1:
+                params["moe_blocks"] = stack_init(
+                    lambda k: dense_block_init(k, cfg, dtype, use_moe=True), k2, n_moe
+                )
+            else:
+                def pair_init(k):
+                    ka, kb = jax.random.split(k)
+                    return {
+                        "dense": dense_block_init(ka, cfg, dtype, use_moe=False),
+                        "moe": dense_block_init(kb, cfg, dtype, use_moe=True),
+                    }
+                params["pair_blocks"] = stack_init(pair_init, k2, n_moe)
+                tail = n_inter - n_moe
+                if tail > 0:
+                    params["tail_blocks"] = stack_init(
+                        lambda k: dense_block_init(k, cfg, dtype, use_moe=False), k3, tail
+                    )
+        elif at == ArchType.SSM:
+            params["blocks"] = stack_init(
+                lambda k: mamba_block_init(k, cfg, dtype), k_body, cfg.num_layers
+            )
+        elif at == ArchType.HYBRID:
+            groups, per_group, tail = hybrid_layout(cfg)
+            k1, k2, k3 = jax.random.split(k_body, 3)
+            params["group_mamba"] = stack_init(
+                lambda k: stack_init(lambda kk: mamba_block_init(kk, cfg, dtype), k, per_group),
+                k1,
+                groups,
+            )
+            params["shared_attn"] = dense_block_init(k2, cfg, dtype, use_moe=False)
+            if tail:
+                params["tail_blocks"] = stack_init(
+                    lambda k: mamba_block_init(k, cfg, dtype), k3, tail
+                )
+        elif at == ArchType.ENCDEC:
+            k1, k2 = jax.random.split(k_body)
+            params["enc_blocks"] = stack_init(
+                lambda k: dense_block_init(k, cfg, dtype, use_moe=False), k1, cfg.encoder_layers
+            )
+            params["enc_ln"] = rmsnorm_init(cfg.d_model, dtype)
+            params["blocks"] = stack_init(
+                lambda k: dec_block_init(k, cfg, dtype), k2, cfg.num_layers
+            )
+        else:
+            raise ValueError(f"unknown arch_type {at}")
+
+        if cfg.frontend is not None:
+            key, k_fp = jax.random.split(key)
+            params["frontend_proj"] = dense_init(k_fp, cfg.d_model, cfg.d_model, dtype)
+        if cfg.mtp:
+            key, k_mtp1, k_mtp2 = jax.random.split(key, 3)
+            params["mtp"] = {
+                "proj": dense_init(k_mtp1, 2 * cfg.d_model, cfg.d_model, dtype),
+                "block": dense_block_init(k_mtp2, cfg, dtype, use_moe=False),
+                "ln": rmsnorm_init(cfg.d_model, dtype),
+            }
+        return params
+
+    # --------------------------------------------------------------- forward
+    def _embed_inputs(self, params: PyTree, batch: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        x = constrain(x, DATA, None, None)
+        if cfg.arch_type == ArchType.VLM:
+            patches = batch["patch_embeds"] @ params["frontend_proj"]
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        return x
+
+    def _backbone(self, params: PyTree, x: jnp.ndarray, enc: jnp.ndarray | None = None):
+        """Run the layer stacks.  Returns (hidden, aux_loss)."""
+        cfg = self.cfg
+        at = cfg.arch_type
+        remat = self.remat
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def dense_body(use_moe):
+            def body(p, h):
+                return dense_block_apply(p, cfg, h, use_moe=use_moe)
+            return body
+
+        if at in (ArchType.DENSE, ArchType.VLM):
+            x, aux = run_stack(params["blocks"], x, dense_body(False), remat=remat)
+            aux_total += aux
+        elif at == ArchType.MOE:
+            if "first_blocks" in params:
+                x, aux = run_stack(params["first_blocks"], x, dense_body(False), remat=remat)
+                aux_total += aux
+            if "moe_blocks" in params:
+                x, aux = run_stack(params["moe_blocks"], x, dense_body(True), remat=remat)
+                aux_total += aux
+            if "pair_blocks" in params:
+                def pair_body(p, h):
+                    h, a1 = dense_block_apply(p["dense"], cfg, h, use_moe=False)
+                    h, a2 = dense_block_apply(p["moe"], cfg, h, use_moe=True)
+                    return h, a1 + a2
+                x, aux = run_stack(params["pair_blocks"], x, pair_body, remat=remat)
+                aux_total += aux
+            if "tail_blocks" in params:
+                x, aux = run_stack(params["tail_blocks"], x, dense_body(False), remat=remat)
+                aux_total += aux
+        elif at == ArchType.SSM:
+            def body(p, h):
+                return mamba_block_apply(p, cfg, h, use_pallas=self.use_pallas), jnp.zeros((), jnp.float32)
+            x, _ = run_stack(params["blocks"], x, body, remat=remat)
+        elif at == ArchType.HYBRID:
+            shared = params["shared_attn"]
+
+            def group_body(p, h):
+                def inner(pp, hh):
+                    return mamba_block_apply(pp, cfg, hh, use_pallas=self.use_pallas), jnp.zeros((), jnp.float32)
+                h, _ = run_stack(p, h, inner, remat=False)
+                h, _ = dense_block_apply(shared, cfg, h, use_moe=False)
+                return h, jnp.zeros((), jnp.float32)
+
+            x, _ = run_stack(params["group_mamba"], x, group_body, remat=remat)
+            if "tail_blocks" in params:
+                def body(p, h):
+                    return mamba_block_apply(p, cfg, h, use_pallas=self.use_pallas), jnp.zeros((), jnp.float32)
+                x, _ = run_stack(params["tail_blocks"], x, body, remat=remat)
+        elif at == ArchType.ENCDEC:
+            assert enc is not None, "encoder-decoder needs encoder output"
+            def body(p, h):
+                return dec_block_apply(p, cfg, h, enc), jnp.zeros((), jnp.float32)
+            x, _ = run_stack(params["blocks"], x, body, remat=remat)
+        return x, aux_total
+
+    def _encode(self, params: PyTree, src_embeds: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = src_embeds @ params["frontend_proj"]
+
+        def body(p, h):
+            return dense_block_apply(p, cfg, h, use_moe=False, causal=False)
+
+        x, _ = run_stack(params["enc_blocks"], x, body, remat=self.remat)
+        return rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+    def hidden(self, params: PyTree, batch: dict[str, jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        enc = None
+        if cfg.arch_type == ArchType.ENCDEC:
+            enc = self._encode(params, batch["src_embeds"])
+        x = self._embed_inputs(params, batch)
+        x, aux = self._backbone(params, x, enc)
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.arch_type == ArchType.VLM:
+            # drop the patch positions: loss/logits apply to text only
+            x = x[:, batch["patch_embeds"].shape[1] :, :]
+        return x, aux
+
+    def _head_matrix(self, params: PyTree) -> jnp.ndarray:
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    def forward_logits(self, params: PyTree, batch: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        x, _ = self.hidden(params, batch)
+        return (x @ self._head_matrix(params)).astype(jnp.float32)
+
+    # ------------------------------------------------------------------ loss
+    def _chunked_ce(self, h: jnp.ndarray, head: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+        """Memory-bounded CE: scan over sequence chunks, remat the logits."""
+        b, s, d = h.shape
+        chunk = min(self.loss_chunk, s)
+        nc = -(-s // chunk)
+        pad = nc * chunk - s
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+        yc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            total, count = carry
+            h_k, y_k = inp
+            logits = (h_k @ head).astype(jnp.float32)
+            logits = constrain(logits, DATA, None, MODEL)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            valid = y_k >= 0
+            ll = jnp.take_along_axis(logp, jnp.maximum(y_k, 0)[..., None], axis=-1)[..., 0]
+            total = total + jnp.sum(jnp.where(valid, -ll, 0.0))
+            count = count + jnp.sum(valid)
+            return (total, count), None
+
+        (total, count), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, yc)
+        )
+        return total / jnp.maximum(count, 1).astype(jnp.float32)
+
+    def loss(self, params: PyTree, batch: dict[str, jnp.ndarray]) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        h, aux = self.hidden(params, batch)
+        head = self._head_matrix(params)
+        ce = self._chunked_ce(h, head, batch["labels"])
+        total = ce
+        metrics = {"ce": ce, "router_aux": aux}
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_weight * aux
+        if cfg.mtp and "mtp" in params:
+            # DeepSeek-style MTP: predict t+2 from (h_t, emb(tok_{t+1}))
+            emb_next = params["embed"][batch["tokens"]][:, 1:, :]
+            mtp_in = jnp.concatenate(
+                [rmsnorm(params["mtp"]["ln"], h[:, :-1, :], cfg.norm_eps), emb_next], axis=-1
+            )
+            mtp_h = mtp_in @ params["mtp"]["proj"]
+            mtp_h, _ = dense_block_apply(params["mtp"]["block"], cfg, mtp_h, use_moe=False)
+            mtp_ce = self._chunked_ce(mtp_h, head, batch["labels"][:, 1:])
+            total = total + 0.3 * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = total
+        return total, metrics
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        at = cfg.arch_type
+
+        def stack_cache(make, n):
+            assert n > 0
+            one = make()
+            return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n, *l.shape)).copy(), one)
+
+        attn_cache = lambda: _self_attn_cache_init(cfg, batch, max_len, dtype)
+        mamba_cache = lambda: mamba2_cache_init(cfg, batch, dtype)
+
+        if at in (ArchType.DENSE, ArchType.VLM):
+            return {"blocks": stack_cache(attn_cache, cfg.num_layers)}
+        if at == ArchType.MOE:
+            first, n_moe, n_inter = moe_layout(cfg)
+            cache: dict[str, Any] = {}
+            if first:
+                cache["first_blocks"] = stack_cache(attn_cache, first)
+            if cfg.moe.moe_every == 1:
+                cache["moe_blocks"] = stack_cache(attn_cache, n_moe)
+            else:
+                cache["pair_blocks"] = {
+                    "dense": stack_cache(attn_cache, n_moe),
+                    "moe": stack_cache(attn_cache, n_moe),
+                }
+                tail = n_inter - n_moe
+                if tail > 0:
+                    cache["tail_blocks"] = stack_cache(attn_cache, tail)
+            return cache
+        if at == ArchType.SSM:
+            return {"blocks": stack_cache(mamba_cache, cfg.num_layers)}
+        if at == ArchType.HYBRID:
+            groups, per_group, tail = hybrid_layout(cfg)
+            cache = {
+                "group_mamba": jax.tree.map(
+                    lambda l: jnp.broadcast_to(l[None, None], (groups, per_group, *l.shape)).copy(),
+                    mamba_cache(),
+                ),
+                "shared_attn": stack_cache(attn_cache, groups),
+            }
+            if tail:
+                cache["tail_blocks"] = stack_cache(mamba_cache, tail)
+            return cache
+        if at == ArchType.ENCDEC:
+            hd = cfg.resolved_head_dim
+            # cross K/V get filled by encode_for_decode(); sized to the
+            # encoder frame count — stored per layer.
+            return {
+                "blocks": {
+                    "self": stack_cache(attn_cache, cfg.num_layers),
+                    "cross_k": jnp.zeros(
+                        (cfg.num_layers, batch, self.encoder_frames(max_len), cfg.num_kv_heads, hd), dtype=dtype
+                    ),
+                    "cross_v": jnp.zeros(
+                        (cfg.num_layers, batch, self.encoder_frames(max_len), cfg.num_kv_heads, hd), dtype=dtype
+                    ),
+                }
+            }
+        raise ValueError(at)
+
+    @staticmethod
+    def encoder_frames(seq_len: int) -> int:
+        """Audio frontend stub: 4x temporal downsampling of the frame track."""
+        return max(seq_len // 4, 8)
+
+    # ---------------------------------------------------------------- decode
+    def decode_step(
+        self,
+        params: PyTree,
+        tokens: jnp.ndarray,
+        cache: PyTree,
+        pos: jnp.ndarray,
+        *,
+        token_embeds: jnp.ndarray | None = None,
+    ) -> tuple[jnp.ndarray, PyTree]:
+        """One new token for every sequence in the batch.
+
+        tokens: (B, 1) int32; pos: scalar int32 absolute position.
+        ``token_embeds`` (B, 1, D) bypasses the embedding table — used to
+        prefill VLM patch embeddings through the decode path.
+        Returns (logits (B, vocab) fp32, new cache).
+        """
+        cfg = self.cfg
+        at = cfg.arch_type
+        if token_embeds is not None:
+            x = token_embeds.astype(params["embed"].dtype)
+            if cfg.frontend == "vision":
+                x = x @ params["frontend_proj"]
+        else:
+            x = params["embed"][tokens]
+        x = constrain(x, DATA, None, None)
+
+        def dense_dec(use_moe):
+            def body(p, h, c):
+                return dense_block_decode(p, cfg, h, c, pos, use_moe=use_moe)
+            return body
+
+        new_cache: dict[str, Any] = {}
+        if at in (ArchType.DENSE, ArchType.VLM):
+            x, new_cache["blocks"] = run_stack_decode(params["blocks"], cache["blocks"], x, dense_dec(False))
+        elif at == ArchType.MOE:
+            if "first_blocks" in params:
+                x, new_cache["first_blocks"] = run_stack_decode(
+                    params["first_blocks"], cache["first_blocks"], x, dense_dec(False)
+                )
+            if "moe_blocks" in params:
+                x, new_cache["moe_blocks"] = run_stack_decode(
+                    params["moe_blocks"], cache["moe_blocks"], x, dense_dec(True)
+                )
+            if "pair_blocks" in params:
+                def pair_body(p, h, c):
+                    h, cd = dense_block_decode(p["dense"], cfg, h, c["dense"], pos, use_moe=False)
+                    h, cm = dense_block_decode(p["moe"], cfg, h, c["moe"], pos, use_moe=True)
+                    return h, {"dense": cd, "moe": cm}
+                x, new_cache["pair_blocks"] = run_stack_decode(
+                    params["pair_blocks"], cache["pair_blocks"], x, pair_body
+                )
+            if "tail_blocks" in params:
+                x, new_cache["tail_blocks"] = run_stack_decode(
+                    params["tail_blocks"], cache["tail_blocks"], x, dense_dec(False)
+                )
+        elif at == ArchType.SSM:
+            def body(p, h, c):
+                return mamba_block_decode(p, cfg, h, c, pos)
+            x, new_cache["blocks"] = run_stack_decode(params["blocks"], cache["blocks"], x, body)
+        elif at == ArchType.HYBRID:
+            shared = params["shared_attn"]
+
+            def group_body(h, inputs):
+                p_group, c_group, c_attn = inputs
+
+                def inner(hh, inp):
+                    pp, cc = inp
+                    hh, cc_new = mamba_block_decode(pp, cfg, hh, cc, pos)
+                    return hh, cc_new
+
+                h, c_group_new = jax.lax.scan(inner, h, (p_group, c_group))
+                h, c_attn_new = dense_block_decode(shared, cfg, h, c_attn, pos, use_moe=False)
+                return h, (c_group_new, c_attn_new)
+
+            x, (cg, ca) = jax.lax.scan(
+                group_body, x, (params["group_mamba"], cache["group_mamba"], cache["shared_attn"])
+            )
+            new_cache["group_mamba"] = cg
+            new_cache["shared_attn"] = ca
+            if "tail_blocks" in params:
+                def body(p, h, c):
+                    return mamba_block_decode(p, cfg, h, c, pos)
+                x, new_cache["tail_blocks"] = run_stack_decode(
+                    params["tail_blocks"], cache["tail_blocks"], x, body
+                )
+        elif at == ArchType.ENCDEC:
+            def body(p, h, c):
+                return dec_block_decode(p, cfg, h, c, pos)
+            x, new_cache["blocks"] = run_stack_decode(params["blocks"], cache["blocks"], x, body)
+        else:
+            raise ValueError(at)
+
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = (x[:, 0, :] @ self._head_matrix(params)).astype(jnp.float32)
+        return logits, new_cache
+
+    def encode_for_decode(self, params: PyTree, src_embeds: jnp.ndarray, cache: PyTree) -> PyTree:
+        """Precompute encoder output and per-layer cross K/V into the cache."""
+        cfg = self.cfg
+        enc = self._encode(params, src_embeds)
+        hd = cfg.resolved_head_dim
+        b, t, _ = enc.shape
+
+        def kv(p):
+            k = (enc @ p["cross"]["w_k"]).reshape(b, t, cfg.num_kv_heads, hd)
+            v = (enc @ p["cross"]["w_v"]).reshape(b, t, cfg.num_kv_heads, hd)
+            return k, v
+
+        ks, vs = jax.vmap(kv)(params["blocks"])
+        cache = dict(cache)
+        blocks = dict(cache["blocks"])
+        blocks["cross_k"] = ks.astype(cache["blocks"]["cross_k"].dtype)
+        blocks["cross_v"] = vs.astype(cache["blocks"]["cross_v"].dtype)
+        cache["blocks"] = blocks
+        return cache
+
+
+# ==========================================================================
+# analytic parameter counting (roofline MODEL_FLOPS = 6 N D)
+# ==========================================================================
+
+def _attn_params(cfg: ArchConfig) -> int:
+    if cfg.mla is not None:
+        m = cfg.mla
+        h = cfg.num_heads
+        return (
+            cfg.d_model * m.q_lora_rank
+            + m.q_lora_rank * h * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+            + cfg.d_model * m.kv_lora_rank
+            + cfg.d_model * m.qk_rope_head_dim
+            + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+            + h * m.v_head_dim * cfg.d_model
+            + m.q_lora_rank + m.kv_lora_rank
+        )
+    hd = cfg.resolved_head_dim
+    base = cfg.d_model * hd * (cfg.num_heads + 2 * cfg.num_kv_heads) + cfg.num_heads * hd * cfg.d_model
+    if cfg.qk_norm:
+        base += 2 * hd
+    return base
+
+
+def _dense_block_params(cfg: ArchConfig) -> int:
+    return _attn_params(cfg) + mlp_param_count(cfg.d_model, cfg.d_ff, cfg.activation) + 2 * cfg.d_model
+
+
+def _moe_block_params(cfg: ArchConfig, active_only: bool) -> int:
+    return _attn_params(cfg) + moe_param_count(cfg, active_only) + 2 * cfg.d_model
+
+
+def count_params_config(cfg: ArchConfig, active_only: bool = False) -> int:
+    at = cfg.arch_type
+    total = cfg.vocab_size * cfg.d_model  # embed
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.vocab_size
+    total += cfg.d_model  # ln_f
+
+    if at in (ArchType.DENSE, ArchType.VLM):
+        total += cfg.num_layers * _dense_block_params(cfg)
+    elif at == ArchType.MOE:
+        first, n_moe, n_inter = moe_layout(cfg)
+        total += first * _dense_block_params(cfg)
+        total += n_moe * _moe_block_params(cfg, active_only)
+        if cfg.moe.moe_every != 1:
+            total += n_inter * _dense_block_params(cfg)
+    elif at == ArchType.SSM:
+        total += cfg.num_layers * (mamba2_param_count(cfg) + cfg.d_model)
+    elif at == ArchType.HYBRID:
+        groups, per_group, tail = hybrid_layout(cfg)
+        total += (groups * per_group + tail) * (mamba2_param_count(cfg) + cfg.d_model)
+        total += _dense_block_params(cfg)  # the shared attention block, once
+    elif at == ArchType.ENCDEC:
+        total += cfg.encoder_layers * _dense_block_params(cfg) + cfg.d_model
+        # decoder blocks: self-attn + cross-attn + mlp
+        total += cfg.num_layers * (
+            2 * _attn_params(cfg)
+            + mlp_param_count(cfg.d_model, cfg.d_ff, cfg.activation)
+            + 3 * cfg.d_model
+        )
+        total += cfg.d_model * cfg.d_model  # frontend proj
+    if cfg.frontend == "vision":
+        total += cfg.d_model * cfg.d_model
+    if cfg.mtp:
+        total += 2 * cfg.d_model * cfg.d_model + _dense_block_params(cfg) + cfg.d_model
+    return int(total)

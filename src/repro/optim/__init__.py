@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWState, apply_updates, cosine_schedule, global_norm
+
+__all__ = ["AdamW", "AdamWState", "apply_updates", "cosine_schedule", "global_norm"]

@@ -1,0 +1,95 @@
+"""Pure-JAX AdamW (Loshchilov & Hutter) — the paper's optimizer.
+
+No optax in this environment; this is a minimal, well-tested decoupled
+weight-decay Adam with optional global-norm gradient clipping, exposed
+through the same ``init`` / ``update`` functional interface optax uses so
+the training loops stay framework-shaped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: PyTree         # first moment
+    nu: PyTree         # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 5e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 5e-3
+    clip_norm: float | None = None
+    # Optional schedule: callable step -> lr multiplier (traced inside jit).
+    schedule: Any = None
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamWState(
+            step=jnp.zeros((), dtype=jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(
+        self, grads: PyTree, state: AdamWState, params: PyTree
+    ) -> tuple[PyTree, AdamWState]:
+        """Returns (updates, new_state); apply with ``params + updates``."""
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * g), state.nu, grads)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        lr = jnp.asarray(self.learning_rate, dtype=jnp.float32)
+        if self.schedule is not None:
+            lr = lr * self.schedule(step)
+
+        def _update(m, v, p):
+            m_hat = m / b1c
+            v_hat = v / b2c
+            adam = m_hat / (jnp.sqrt(v_hat) + self.eps)
+            return (-lr * (adam + self.weight_decay * p)).astype(p.dtype)
+
+        updates = jax.tree.map(_update, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def cosine_schedule(warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    """lr multiplier: linear warmup then cosine decay to ``min_ratio``."""
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, float(warmup_steps))
+        progress = (step - warmup_steps) / jnp.maximum(1.0, float(total_steps - warmup_steps))
+        progress = jnp.clip(progress, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,43 @@
+"""Checkpoint save/restore roundtrip tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import checkpoint_metadata, load_pytree, save_pytree
+from repro.models.gru import GRUConfig, init_gru
+
+
+def test_roundtrip_nested_pytree(tmp_path):
+    tree = {
+        "layers": [{"w": jnp.arange(6.0).reshape(2, 3)}, {"w": jnp.ones((3,))}],
+        "head": {"b": jnp.asarray([1.5])},
+    }
+    save_pytree(str(tmp_path), tree, metadata={"round": 7})
+    out = load_pytree(str(tmp_path), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert checkpoint_metadata(str(tmp_path))["round"] == 7
+
+
+def test_roundtrip_model_params(tmp_path):
+    params = init_gru(jax.random.key(0), GRUConfig())
+    save_pytree(str(tmp_path), params)
+    out = load_pytree(str(tmp_path), params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_pytree(str(tmp_path), {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_pytree(str(tmp_path), {"b": jnp.zeros(2)})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_pytree(str(tmp_path), {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        load_pytree(str(tmp_path), {"a": jnp.zeros(3)})

@@ -1,0 +1,92 @@
+"""Synthetic eICU cohort generator tests (the simulated data gate)."""
+
+import numpy as np
+
+from repro.core.histogram import l1_divergence, target_histogram
+from repro.data.pipeline import build_client_datasets, global_dataset
+from repro.data.synth_eicu import Cohort, CohortConfig, generate_cohort
+
+SMALL = CohortConfig().scaled(0.05)
+
+
+def test_cohort_shapes_and_splits():
+    c = generate_cohort(SMALL, seed=0)
+    n = SMALL.total_stays
+    assert c.x_temporal.shape == (n, 24, 20)
+    assert c.x_static.shape == (n, 18)
+    assert c.y.shape == (n,)
+    # split fractions match the paper's 62,375 / 13,376 / 13,376
+    fr_train = (c.split == Cohort.TRAIN).mean()
+    assert abs(fr_train - 0.6998) < 0.01
+    assert (c.split == Cohort.VAL).sum() > 0 and (c.split == Cohort.TEST).sum() > 0
+
+
+def test_los_statistics_match_paper():
+    c = generate_cohort(CohortConfig().scaled(0.3), seed=1)
+    # paper: mean 3.69, median 2.27 (global); tolerate sampling noise
+    assert abs(float(np.mean(c.y)) - 3.69) < 0.45
+    assert abs(float(np.median(c.y)) - 2.27) < 0.3
+    assert np.all(c.y > 0)
+
+
+def test_hospitals_are_non_iid():
+    c = generate_cohort(SMALL, seed=2)
+    global_hist = target_histogram(c.y)
+    divs = []
+    for h in range(c.num_hospitals):
+        y_h = c.y[c.hospital_id == h]
+        if len(y_h) < 20:
+            continue
+        divs.append(l1_divergence(global_hist, target_histogram(y_h)))
+    divs = np.array(divs)
+    # non-IID: typical hospital diverges noticeably; heterogeneity across sites
+    assert divs.mean() > 0.05
+    assert divs.std() > 0.01
+
+
+def test_determinism():
+    a = generate_cohort(SMALL, seed=3)
+    b = generate_cohort(SMALL, seed=3)
+    assert np.array_equal(a.y, b.y)
+    assert np.array_equal(a.x_temporal, b.x_temporal)
+    c = generate_cohort(SMALL, seed=4)
+    assert not np.array_equal(a.y, c.y)
+
+
+def test_client_datasets_partition_train_split():
+    c = generate_cohort(SMALL, seed=5)
+    clients = build_client_datasets(c)
+    assert len(clients) > 150  # most of the 189 survive the size cut
+    total = sum(cl.n_train for cl in clients)
+    # every train sample belongs to exactly one surviving client (minus
+    # samples of dropped degenerate hospitals)
+    assert total <= (c.split == Cohort.TRAIN).sum()
+    assert total >= 0.98 * (c.split == Cohort.TRAIN).sum()
+    ids = [cl.client_id for cl in clients]
+    assert len(set(ids)) == len(ids)
+
+
+def test_features_carry_signal():
+    """Severity-driven features: correlation between a feature summary and
+    log-LoS must be clearly nonzero, else the prediction task is vacuous."""
+    c = generate_cohort(SMALL, seed=6)
+    feat = c.x_temporal.mean(axis=(1, 2)) + c.x_static.mean(axis=1)
+    r = np.corrcoef(feat, np.log(c.y))[0, 1]
+    assert abs(r) > 0.2
+
+
+def test_fused_features_layout():
+    c = generate_cohort(SMALL, seed=7)
+    fused = c.fused_features()
+    assert fused.shape == (SMALL.total_stays, 24, 38)
+    # static block is constant across time
+    assert np.allclose(fused[:, 0, 20:], fused[:, 12, 20:])
+
+
+def test_client_stats_disclosure_only():
+    c = generate_cohort(SMALL, seed=8)
+    clients = build_client_datasets(c)
+    s = clients[0].stats()
+    assert s.counts.shape == (10,)
+    assert s.n == clients[0].n_train
+    assert s.counts.sum() == s.n

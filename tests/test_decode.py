@@ -1,0 +1,122 @@
+"""Decode path == full forward, per architecture family.
+
+The strongest correctness property of the serving stack: stepping the
+decode cache token by token reproduces the full-sequence forward logits.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ArchType
+from repro.models.zoo import Model
+
+B, S = 2, 12
+RNG = np.random.default_rng(1)
+
+
+def decode_all(model, params, toks, cache, start_pos=0):
+    outs = []
+    pos = start_pos
+    for t in range(toks.shape[1]):
+        lg, cache = model.decode_step(params, toks[:, t : t + 1], cache, jnp.int32(pos))
+        outs.append(lg)
+        pos += 1
+    return jnp.stack(outs, axis=1), cache
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen3-1.7b", "smollm-135m", "yi-9b", "nemotron-4-15b", "mamba2-130m", "zamba2-7b"]
+)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full = model.forward_logits(params, {"tokens": toks, "labels": toks})
+    dec, _ = decode_all(model, params, toks, model.init_cache(B, S))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "llama4-scout-17b-a16e"])
+def test_moe_decode_matches_forward_high_capacity(arch):
+    """With generous capacity (no token drops) MoE decode == forward; at
+    tight capacity they may differ only through dropped tokens."""
+    cfg0 = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg0, moe=dataclasses.replace(cfg0.moe, capacity_factor=8.0))
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full = model.forward_logits(params, {"tokens": toks, "labels": toks})
+    dec, _ = decode_all(model, params, toks, model.init_cache(B, S))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4, rtol=1e-4)
+
+
+def test_encdec_decode_matches_forward():
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    src = jnp.asarray(RNG.normal(size=(B, 8, cfg.d_model)), jnp.float32)
+    full = model.forward_logits(params, {"tokens": toks, "labels": toks, "src_embeds": src})
+    cache = model.init_cache(B, S)
+    cache = model.encode_for_decode(params, src, cache)
+    dec, _ = decode_all(model, params, toks, cache)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4, rtol=1e-4)
+
+
+def test_vlm_decode_with_patch_prefill():
+    cfg = get_config("internvl2-26b").reduced()
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    F = cfg.num_frontend_tokens
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    patches = jnp.asarray(RNG.normal(size=(B, F, cfg.d_model)), jnp.float32)
+    full = model.forward_logits(params, {"tokens": toks, "labels": toks, "patch_embeds": patches})
+    cache = model.init_cache(B, F + S)
+    pos = 0
+    for i in range(F):
+        _, cache = model.decode_step(
+            params, None, cache, jnp.int32(pos), token_embeds=patches[:, i : i + 1]
+        )
+        pos += 1
+    dec, _ = decode_all(model, params, toks, cache, start_pos=pos)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4, rtol=1e-4)
+
+
+def test_sliding_window_decode_forgets_far_context():
+    """Long-context variant: with window W, tokens farther than W behind the
+    query must not influence the logits (the cache is a ring buffer)."""
+    base = get_config("qwen3-1.7b").reduced()
+    cfg = dataclasses.replace(base, sliding_window=4)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    n = 10
+    toks_a = jnp.asarray(RNG.integers(0, cfg.vocab_size, (1, n)), jnp.int32)
+    toks_b = toks_a.at[:, 0].set((toks_a[0, 0] + 7) % cfg.vocab_size)  # differ at pos 0 only
+
+    def last_logits(toks):
+        cache = model.init_cache(1, n)
+        out = None
+        for t in range(n):
+            out, cache = model.decode_step(params, toks[:, t : t + 1], cache, jnp.int32(t))
+        return out
+
+    la, lb = last_logits(toks_a), last_logits(toks_b)
+    # position 0 is far outside the window of the final step
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+
+
+def test_sliding_window_prefill_matches_decode():
+    base = get_config("smollm-135m").reduced()
+    cfg = dataclasses.replace(base, sliding_window=4)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full = model.forward_logits(params, {"tokens": toks, "labels": toks})
+    dec, _ = decode_all(model, params, toks, model.init_cache(B, S))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4, rtol=1e-4)

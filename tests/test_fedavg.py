@@ -1,0 +1,78 @@
+"""FedAvg aggregation unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.federated.fedavg import aggregate, apply_delta, delta, params_nbytes, tree_allclose
+
+
+def tree(vals):
+    return {"a": jnp.asarray(vals[0]), "b": {"c": jnp.asarray(vals[1])}}
+
+
+def test_uniform_average():
+    t1 = tree([np.ones((2, 2)), np.zeros(3)])
+    t2 = tree([3 * np.ones((2, 2)), 2 * np.ones(3)])
+    out = aggregate([t1, t2])
+    assert np.allclose(out["a"], 2.0)
+    assert np.allclose(out["b"]["c"], 1.0)
+
+
+def test_weighted_by_sample_size():
+    t1 = tree([np.zeros((2,)), np.zeros(1)])
+    t2 = tree([np.ones((2,)), np.ones(1)])
+    out = aggregate([t1, t2], weights=[1, 3])
+    assert np.allclose(out["a"], 0.75)
+
+
+def test_single_client_identity():
+    t = tree([np.arange(4.0), np.ones(2)])
+    assert tree_allclose(aggregate([t], weights=[17]), t)
+
+
+def test_invalid_weights_raise():
+    t = tree([np.zeros(1), np.zeros(1)])
+    with pytest.raises(ValueError):
+        aggregate([t, t], weights=[-1, 2])
+    with pytest.raises(ValueError):
+        aggregate([t, t], weights=[0, 0])
+    with pytest.raises(ValueError):
+        aggregate([])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_clients=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_convexity_and_idempotence(n_clients, seed):
+    """Aggregate lies inside the convex hull per coordinate, and aggregating
+    identical replicas is the identity."""
+    rng = np.random.default_rng(seed)
+    trees = [tree([rng.normal(size=(3, 2)), rng.normal(size=5)]) for _ in range(n_clients)]
+    weights = rng.uniform(0.1, 10.0, n_clients)
+    out = aggregate(trees, weights)
+    for key_fn in (lambda t: t["a"], lambda t: t["b"]["c"]):
+        stack = np.stack([np.asarray(key_fn(t)) for t in trees])
+        lo, hi = stack.min(axis=0), stack.max(axis=0)
+        v = np.asarray(key_fn(out))
+        assert np.all(v >= lo - 1e-5) and np.all(v <= hi + 1e-5)
+    # idempotence
+    same = aggregate([trees[0]] * n_clients, weights)
+    assert tree_allclose(same, trees[0], atol=1e-5)
+
+
+def test_delta_roundtrip():
+    rng = np.random.default_rng(0)
+    a = tree([rng.normal(size=(2, 2)), rng.normal(size=3)])
+    b = tree([rng.normal(size=(2, 2)), rng.normal(size=3)])
+    d = delta(b, a)
+    assert tree_allclose(apply_delta(a, d), b, atol=1e-6)
+
+
+def test_params_nbytes():
+    t = {"x": jnp.zeros((4, 4), jnp.float32), "y": jnp.zeros(8, jnp.float32)}
+    assert params_nbytes(t) == (16 + 8) * 4

@@ -1,0 +1,122 @@
+"""Integration tests of the federated runtime against the paper's protocol."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.recruitment import BALANCED, RecruitmentConfig
+from repro.data.pipeline import build_client_datasets, global_dataset
+from repro.data.synth_eicu import Cohort, CohortConfig, generate_cohort
+from repro.federated.central import CentralConfig, train_central
+from repro.federated.selection import select_clients
+from repro.federated.server import FederatedConfig, FederatedServer
+from repro.metrics.regression import evaluate_predictions
+from repro.models.gru import GRUConfig, gru_apply, init_gru, make_loss_fn
+from repro.optim.adamw import AdamW
+
+TINY = CohortConfig().scaled(0.02)  # ~1.8k stays, fast
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cohort = generate_cohort(TINY, seed=0)
+    clients = build_client_datasets(cohort)
+    cfg = GRUConfig()
+    return cohort, clients, cfg, make_loss_fn(cfg), AdamW(learning_rate=5e-3, weight_decay=5e-3)
+
+
+def test_selection_semantics():
+    rng = np.random.default_rng(0)
+    ids = np.arange(30)
+    assert len(select_clients(rng, ids)) == 30
+    sub = select_clients(rng, ids, fraction=0.1)
+    assert len(sub) == 3 and len(set(sub.tolist())) == 3
+    assert len(select_clients(rng, ids, count=7)) == 7
+    assert len(select_clients(rng, ids, fraction=0.001)) == 1  # at least one
+    with pytest.raises(ValueError):
+        select_clients(rng, ids, fraction=0.5, count=3)
+
+
+def test_recruitment_prunes_federation(setup):
+    _, clients, cfg, loss_fn, opt = setup
+    fed = FederatedConfig(rounds=1, local_epochs=1, recruitment=BALANCED, seed=0)
+    server = FederatedServer(fed, clients, loss_fn, opt)
+    ids, rec = server.build_federation()
+    assert rec is not None
+    assert 0 < len(ids) < len(clients)
+    assert set(ids.tolist()) <= {c.client_id for c in clients}
+
+
+def test_no_recruitment_keeps_everyone(setup):
+    _, clients, cfg, loss_fn, opt = setup
+    fed = FederatedConfig(rounds=1, local_epochs=1, recruitment=None, seed=0)
+    server = FederatedServer(fed, clients, loss_fn, opt)
+    ids, rec = server.build_federation()
+    assert rec is None and len(ids) == len(clients)
+
+
+def test_federated_round_improves_over_init(setup):
+    cohort, clients, cfg, loss_fn, opt = setup
+    params0 = init_gru(jax.random.key(0), cfg)
+    fed = FederatedConfig(
+        rounds=3, local_epochs=1, participation_fraction=0.2,
+        recruitment=RecruitmentConfig(gamma_th=0.3), seed=0,
+    )
+    server = FederatedServer(fed, clients, loss_fn, opt)
+    result = server.run(params0)
+    test = global_dataset(cohort, Cohort.TEST)
+    m0 = evaluate_predictions(test.y, np.asarray(gru_apply(params0, cfg, test.x)))
+    m1 = evaluate_predictions(test.y, np.asarray(gru_apply(result.params, cfg, test.x)))
+    assert m1["msle"] < m0["msle"]
+    # history integrity
+    assert len(result.history) == 3
+    for r in result.history:
+        assert set(r.participant_ids) <= set(result.federation_ids.tolist())
+        assert r.local_steps > 0
+    assert result.total_local_steps == sum(r.local_steps for r in result.history)
+
+
+def test_recruited_federation_fewer_steps(setup):
+    """The paper's training-time claim in its simulated form: recruitment
+    cuts the per-round local-step budget."""
+    _, clients, cfg, loss_fn, opt = setup
+    base = FederatedConfig(rounds=1, local_epochs=1, seed=0)
+    rec = FederatedConfig(rounds=1, local_epochs=1, recruitment=BALANCED, seed=0)
+    params = init_gru(jax.random.key(0), cfg)
+    out_base = FederatedServer(base, clients, loss_fn, opt).run(params)
+    out_rec = FederatedServer(rec, clients, loss_fn, opt).run(params)
+    assert out_rec.total_local_steps < out_base.total_local_steps
+
+
+def test_central_baseline_trains(setup):
+    cohort, _, cfg, loss_fn, opt = setup
+    params0 = init_gru(jax.random.key(0), cfg)
+    result = train_central(
+        CentralConfig(epochs=2, batch_size=128, seed=0),
+        global_dataset(cohort, Cohort.TRAIN),
+        params0, loss_fn, opt,
+    )
+    assert result.epoch_losses[-1] < result.epoch_losses[0]
+    assert result.total_steps > 0
+
+
+def test_aggregation_weighted_by_sample_size(setup):
+    """FedAvg weighting: a client with more data pulls the average harder.
+    Verified indirectly: with one participant the global params equal that
+    client's locally trained params."""
+    cohort, clients, cfg, loss_fn, opt = setup
+    params0 = init_gru(jax.random.key(0), cfg)
+    one = [clients[0]]
+    fed = FederatedConfig(rounds=1, local_epochs=1, seed=0)
+    out = FederatedServer(fed, one, loss_fn, opt).run(params0)
+    from repro.federated.client import LocalTrainer
+
+    trainer = LocalTrainer(loss_fn, opt, batch_size=128, local_epochs=1)
+    # replicate the server's rng path: one jax split before the client call
+    _, sub = jax.random.split(jax.random.key(0))
+    expected, _, _ = trainer.train_client(
+        params0, clients[0], np.random.default_rng(0), sub
+    )
+    # same rng path -> identical params
+    for a, b in zip(jax.tree.leaves(out.params), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

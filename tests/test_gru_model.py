@@ -1,0 +1,66 @@
+"""The paper's GRU model: shapes, positivity, loss, dropout, pallas parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gru import GRUConfig, count_params, gru_apply, init_gru, make_loss_fn, msle_loss
+
+RNG = np.random.default_rng(0)
+CFG = GRUConfig()  # paper Table 1: 2 layers, N=32, dropout 0.05, input 38
+
+
+def test_output_shape_and_positivity():
+    params = init_gru(jax.random.key(0), CFG)
+    x = jnp.asarray(RNG.normal(size=(9, 24, 38)), jnp.float32)
+    y = gru_apply(params, CFG, x)
+    assert y.shape == (9,)
+    assert bool(jnp.all(y >= 0))  # eq. (2): ReLU head, LoS cannot be negative
+
+
+def test_param_count_matches_architecture():
+    params = init_gru(jax.random.key(0), CFG)
+    n, f, h = 32, 38, 32
+    expected = (f * 3 * n + h * 3 * n + 6 * n) + (h * 3 * h + h * 3 * h + 6 * h) + (h + 1)
+    assert count_params(params) == expected
+
+
+def test_msle_loss_properties():
+    y = jnp.asarray([1.0, 2.0, 3.0])
+    assert float(msle_loss(y, y)) == 0.0
+    assert float(msle_loss(y, y + 1)) > 0
+    # masked entries do not contribute
+    m = jnp.asarray([1.0, 1.0, 0.0])
+    full = msle_loss(y[:2], (y + 5)[:2])
+    masked = msle_loss(y, y.at[2].set(99.0) + 5 * 0 + jnp.asarray([5.0, 5.0, 0.0]), m)
+    assert float(masked) == pytest.approx(float(full), rel=1e-5)
+
+
+def test_dropout_train_vs_eval():
+    params = init_gru(jax.random.key(0), CFG)
+    x = jnp.asarray(RNG.normal(size=(4, 24, 38)), jnp.float32)
+    y_eval = gru_apply(params, CFG, x)
+    y_tr1 = gru_apply(params, CFG, x, train=True, rng=jax.random.key(1))
+    y_tr2 = gru_apply(params, CFG, x, train=True, rng=jax.random.key(2))
+    assert not np.allclose(np.asarray(y_tr1), np.asarray(y_tr2))
+    assert np.allclose(np.asarray(y_eval), np.asarray(gru_apply(params, CFG, x)))
+
+
+def test_loss_fn_and_grads():
+    params = init_gru(jax.random.key(0), CFG)
+    loss_fn = make_loss_fn(CFG)
+    x = jnp.asarray(RNG.normal(size=(8, 24, 38)), jnp.float32)
+    y = jnp.asarray(RNG.uniform(0.5, 10, 8), jnp.float32)
+    mask = jnp.ones(8)
+    loss, grads = jax.value_and_grad(loss_fn)(params, (x, y, mask), jax.random.key(0))
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+
+
+def test_pallas_path_matches_scan():
+    params = init_gru(jax.random.key(0), CFG)
+    x = jnp.asarray(RNG.normal(size=(5, 24, 38)), jnp.float32)
+    y0 = gru_apply(params, CFG, x)
+    y1 = gru_apply(params, GRUConfig(use_pallas=True), x)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5)

@@ -1,0 +1,68 @@
+"""Regression metrics + Welch t-test (pure-numpy scipy replacement)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.metrics.regression import evaluate_predictions, mae, mape, mse, msle
+from repro.metrics.stats import significance_stars, t_sf, welch_t_test
+
+
+def test_metric_formulas():
+    y = np.array([1.0, 2.0, 4.0])
+    yh = np.array([1.0, 3.0, 2.0])
+    assert mae(y, yh) == pytest.approx(1.0)
+    assert mse(y, yh) == pytest.approx((0 + 1 + 4) / 3)
+    assert mape(y, yh) == pytest.approx((0 + 0.5 + 0.5) / 3)
+    expected_msle = np.mean((np.log1p(y) - np.log1p(yh)) ** 2)
+    assert msle(y, yh) == pytest.approx(expected_msle)
+    out = evaluate_predictions(y, yh)
+    assert set(out) == {"mae", "mape", "mse", "msle"}
+
+
+def test_perfect_predictions_zero():
+    y = np.linspace(0.5, 10, 20)
+    out = evaluate_predictions(y, y)
+    assert all(v == 0.0 for v in out.values())
+
+
+def test_t_sf_reference_values():
+    # classic table values: two-sided p for t with df
+    assert t_sf(0.0, 10) == pytest.approx(1.0, abs=1e-9)
+    assert t_sf(2.228, 10) == pytest.approx(0.05, abs=2e-3)   # t_{0.025, 10}
+    assert t_sf(1.96, 1e6) == pytest.approx(0.05, abs=1e-3)   # -> normal
+    assert t_sf(3.169, 10) == pytest.approx(0.01, abs=2e-3)
+
+
+def test_welch_detects_difference():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0.0, 1.0, 60)
+    b = rng.normal(1.0, 1.0, 60)
+    t, p = welch_t_test(a, b)
+    assert p < 0.001
+    t2, p2 = welch_t_test(a, rng.normal(0.0, 1.0, 60))
+    assert p2 > 0.01
+
+
+def test_welch_symmetry():
+    rng = np.random.default_rng(1)
+    a, b = rng.normal(size=30), rng.normal(size=30) + 0.3
+    t_ab, p_ab = welch_t_test(a, b)
+    t_ba, p_ba = welch_t_test(b, a)
+    assert t_ab == pytest.approx(-t_ba)
+    assert p_ab == pytest.approx(p_ba)
+
+
+def test_significance_stars():
+    assert significance_stars(0.005) == "**"
+    assert significance_stars(0.03) == "*"
+    assert significance_stars(0.2) == ""
+    assert significance_stars(float("nan")) == ""
+
+
+def test_welch_degenerate_inputs():
+    t, p = welch_t_test(np.array([1.0]), np.array([1.0, 2.0]))
+    assert math.isnan(t) and math.isnan(p)
+    t, p = welch_t_test(np.array([2.0, 2.0]), np.array([2.0, 2.0]))
+    assert p == 1.0

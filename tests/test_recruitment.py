@@ -1,0 +1,170 @@
+"""Unit + property tests for the paper's client recruitment (core contribution)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.histogram import LOS_BIN_EDGES, l1_divergence, normalize, target_histogram
+from repro.core.recruitment import (
+    BALANCED,
+    ClientStats,
+    RecruitmentConfig,
+    recruit,
+    recruitment_curve,
+    representativeness,
+)
+
+NUM_BINS = len(LOS_BIN_EDGES) - 1
+
+
+def make_stats(counts_list):
+    return [
+        ClientStats(client_id=i, counts=np.asarray(c, dtype=np.int64), n=int(np.sum(c)))
+        for i, c in enumerate(counts_list)
+    ]
+
+
+# --------------------------------------------------------------------------
+# histogram
+# --------------------------------------------------------------------------
+
+def test_los_bins_match_paper():
+    # paper: [0,1), [1,2), ..., [7,8), [8,14), [14, inf) — ten bins
+    assert NUM_BINS == 10
+    y = np.array([0.5, 1.5, 7.9, 8.0, 13.99, 14.0, 99.0])
+    h = target_histogram(y)
+    assert h[0] == 1 and h[1] == 1 and h[7] == 1
+    assert h[8] == 2          # [8, 14)
+    assert h[9] == 2          # [14, inf)
+    assert h.sum() == len(y)
+
+
+def test_normalize_zero_safe():
+    assert normalize(np.zeros(10)).sum() == 0.0
+
+
+def test_l1_divergence_bounds():
+    a = np.array([10, 0, 0]); b = np.array([0, 0, 10])
+    assert l1_divergence(a, a) == 0.0
+    assert l1_divergence(a, b) == pytest.approx(2.0)  # disjoint supports
+
+
+# --------------------------------------------------------------------------
+# representativeness (eq. 4)
+# --------------------------------------------------------------------------
+
+def test_identical_distributions_rank_by_size():
+    # same shape, different n: nu differs only through gamma_sa * n^-1/2
+    base = np.array([5, 3, 2, 0, 0, 0, 0, 0, 0, 0])
+    stats = make_stats([base * 2, base * 8, base * 32])
+    nu = representativeness(stats, RecruitmentConfig(gamma_dv=0.5, gamma_sa=0.5))
+    assert nu[0] > nu[1] > nu[2]  # bigger client = more representative (lower nu)
+
+
+def test_divergent_client_penalized():
+    typical = np.array([50, 30, 10, 5, 2, 1, 1, 1, 0, 0])
+    outlier = np.array([0, 0, 0, 0, 0, 0, 0, 0, 30, 70])  # long-stay-only hospital
+    stats = make_stats([typical, typical, typical, outlier])
+    nu = representativeness(stats, RecruitmentConfig(gamma_dv=1.0, gamma_sa=0.0))
+    assert nu[3] > nu[:3].max()
+
+
+def test_gamma_weights_move_nu():
+    a = np.array([50, 30, 20, 0, 0, 0, 0, 0, 0, 0])
+    b = np.array([1, 1, 1, 1, 1, 1, 1, 1, 1, 1])
+    stats = make_stats([a, b])
+    qg = representativeness(stats, RecruitmentConfig(gamma_dv=1.0, gamma_sa=0.01))
+    dg = representativeness(stats, RecruitmentConfig(gamma_dv=0.01, gamma_sa=1.0))
+    # quality-greedy cares about shape, data-greedy about size
+    assert not np.allclose(qg, dg)
+
+
+# --------------------------------------------------------------------------
+# recruitment (threshold crossing)
+# --------------------------------------------------------------------------
+
+def test_gamma_th_one_recruits_everyone():
+    rng = np.random.default_rng(0)
+    stats = make_stats([rng.integers(1, 100, NUM_BINS) for _ in range(23)])
+    res = recruit(stats, RecruitmentConfig(gamma_th=1.0))
+    assert res.num_recruited == 23
+    assert sorted(res.recruited_ids.tolist()) == list(range(23))
+
+
+def test_recruited_are_lowest_nu():
+    rng = np.random.default_rng(1)
+    stats = make_stats([rng.integers(1, 100, NUM_BINS) for _ in range(40)])
+    res = recruit(stats, BALANCED)
+    nu = res.nu
+    recruited_nu = nu[np.isin(res.client_ids, res.recruited_ids)]
+    excluded_nu = nu[~np.isin(res.client_ids, res.recruited_ids)]
+    assert res.num_recruited >= 1
+    assert recruited_nu.max() <= excluded_nu.min() + 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(
+        st.lists(st.integers(0, 50), min_size=NUM_BINS, max_size=NUM_BINS).filter(
+            lambda c: sum(c) > 0
+        ),
+        min_size=2,
+        max_size=25,
+    ),
+    gammas=st.tuples(
+        st.floats(0.01, 2.0, allow_nan=False),
+        st.floats(0.0, 2.0, allow_nan=False),
+    ),
+)
+def test_property_recruitment_invariants(data, gammas):
+    """For any population and weights: recruited set is a non-empty subset,
+    nu is finite-positive, and num_recruited is monotone in gamma_th."""
+    stats = make_stats(data)
+    gdv, gsa = gammas
+    counts = []
+    for gth in (0.05, 0.25, 0.5, 0.75, 1.0):
+        cfg = RecruitmentConfig(gamma_dv=gdv, gamma_sa=gsa, gamma_th=gth)
+        res = recruit(stats, cfg)
+        assert 1 <= res.num_recruited <= len(stats)
+        assert np.all(np.isfinite(res.nu)) and np.all(res.nu >= 0)
+        assert len(set(res.recruited_ids.tolist())) == res.num_recruited
+        counts.append(res.num_recruited)
+    assert counts == sorted(counts)          # monotone in gamma_th
+    assert counts[-1] == len(stats)          # gamma_th = 1 -> everyone
+
+
+@settings(max_examples=20, deadline=None)
+@given(perm_seed=st.integers(0, 2**31 - 1))
+def test_property_order_invariance(perm_seed):
+    """Recruitment outcome is invariant to client presentation order."""
+    rng = np.random.default_rng(7)
+    data = [rng.integers(1, 60, NUM_BINS) for _ in range(17)]
+    stats = make_stats(data)
+    res_a = recruit(stats, BALANCED)
+    perm = np.random.default_rng(perm_seed).permutation(len(stats))
+    res_b = recruit([stats[i] for i in perm], BALANCED)
+    assert sorted(res_a.recruited_ids.tolist()) == sorted(res_b.recruited_ids.tolist())
+
+
+def test_recruitment_curve_matches_paper_shape():
+    """Fig. 2: num recruited grows with gamma_th, hits all clients at 1.0."""
+    rng = np.random.default_rng(3)
+    stats = make_stats([rng.integers(1, 100, NUM_BINS) * rng.integers(1, 50) for _ in range(189)])
+    curve = recruitment_curve(stats, BALANCED, [0.05, 0.1, 0.3, 0.6, 1.0])
+    ns = [n for _, n in curve]
+    assert ns == sorted(ns)
+    assert ns[-1] == 189
+    assert ns[0] < 189 // 2  # low threshold recruits a minority
+
+
+def test_invalid_configs_raise():
+    with pytest.raises(ValueError):
+        RecruitmentConfig(gamma_th=0.0)
+    with pytest.raises(ValueError):
+        RecruitmentConfig(gamma_th=1.5)
+    with pytest.raises(ValueError):
+        RecruitmentConfig(gamma_dv=-1.0)
+    with pytest.raises(ValueError):
+        ClientStats(client_id=0, counts=np.ones(10), n=0)

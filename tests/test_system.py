@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests: the paper's pipeline from cohort to metrics.
+
+Mirrors the claims of paper section 6 at test scale:
+  * recruitment selects a minority of clients,
+  * Federated-SRC trains fewer local steps than Federated-SC,
+  * all settings produce finite, sane metrics on the hold-out test set.
+"""
+
+import numpy as np
+import pytest
+
+from repro.experiments.paper import (
+    MODEL_SETTINGS,
+    ExperimentConfig,
+    build_cohort,
+    run_setting,
+)
+
+EXP = ExperimentConfig(cohort_scale=0.02, rounds=2, local_epochs=1, central_epochs=2)
+
+
+@pytest.fixture(scope="module")
+def cohort():
+    return build_cohort(EXP, seed=0)
+
+
+def test_all_settings_exist():
+    assert set(MODEL_SETTINGS) == {
+        "central", "federated-ac", "federated-sc", "federated-arc",
+        "federated-src", "federated-src-qg", "federated-src-dg",
+    }
+
+
+@pytest.mark.parametrize("setting", ["central", "federated-sc", "federated-src"])
+def test_setting_runs_and_reports(setting, cohort):
+    out = run_setting(setting, EXP, cohort, seed=0)
+    m = out["metrics"]
+    for k in ("mae", "mape", "mse", "msle"):
+        assert np.isfinite(m[k]) and m[k] >= 0
+    assert out["tau_s"] > 0
+    assert out["local_steps"] > 0
+    if setting == "federated-src":
+        assert out["recruited"] is not None
+        assert out["federation_size"] == out["recruited"]
+    if setting == "federated-sc":
+        assert out["recruited"] is None
+
+
+def test_src_cheaper_than_sc(cohort):
+    sc = run_setting("federated-sc", EXP, cohort, seed=0)
+    src = run_setting("federated-src", EXP, cohort, seed=0)
+    # recruitment shrinks the federation -> fewer clients available per round
+    assert src["federation_size"] < sc["federation_size"]
+
+
+def test_greedy_ablations_recruit_differently(cohort):
+    qg = run_setting("federated-src-qg", EXP, cohort, seed=0)
+    dg = run_setting("federated-src-dg", EXP, cohort, seed=0)
+    balanced = run_setting("federated-src", EXP, cohort, seed=0)
+    sizes = {qg["recruited"], dg["recruited"], balanced["recruited"]}
+    assert len(sizes) >= 2  # the strategies pick different federations
+
+
+def test_predictions_in_positive_domain(cohort):
+    out = run_setting("central", EXP, cohort, seed=1)
+    # MSLE finite implies predictions were valid for log1p (>= 0)
+    assert np.isfinite(out["metrics"]["msle"])
