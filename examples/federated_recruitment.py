@@ -19,9 +19,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.3, help="cohort scale (1.0 = 89k stays)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--engine", choices=["vectorized", "sequential"], default="vectorized",
+        help="vectorized = whole cohort per round in one jitted vmap",
+    )
+    ap.add_argument(
+        "--cohort-chunk", type=int, default=None,
+        help="vectorized engine: clients per vmapped call (bounds memory)",
+    )
     args = ap.parse_args()
 
-    exp = ExperimentConfig(cohort_scale=args.scale)  # paper-faithful settings
+    # paper-faithful settings, trained on the selected engine
+    exp = ExperimentConfig(
+        cohort_scale=args.scale, engine=args.engine, cohort_chunk=args.cohort_chunk
+    )
+    print(f"engine: {args.engine}")
     cohort = build_cohort(exp, seed=args.seed)
     print(f"cohort: {len(cohort.y):,} stays, {cohort.num_hospitals} hospitals")
 

@@ -29,13 +29,17 @@ def main() -> None:
         f"gamma_th={BALANCED.gamma_th}; threshold iota={result.iota:.2f})"
     )
 
-    # 3. federated training on the recruited subset (Federated-SRC setting)
+    # 3. federated training on the recruited subset (Federated-SRC setting).
+    #    The vectorized engine trains every round participant inside ONE
+    #    jitted vmap; engine="sequential" is the per-client reference loop.
     model_cfg = GRUConfig()
+    fed_cfg = FederatedConfig(
+        rounds=5, local_epochs=2, participation_fraction=0.1,
+        recruitment=BALANCED, seed=0, engine="vectorized",
+    )
+    print(f"engine: {fed_cfg.engine}")
     server = FederatedServer(
-        FederatedConfig(
-            rounds=5, local_epochs=2, participation_fraction=0.1,
-            recruitment=BALANCED, seed=0,
-        ),
+        fed_cfg,
         clients,
         make_loss_fn(model_cfg),
         AdamW(learning_rate=5e-3, weight_decay=5e-3),

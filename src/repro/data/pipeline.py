@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -52,6 +52,104 @@ class ArrayDataset:
             mask = np.zeros(batch_size, dtype=np.float32)
             mask[:k] = 1.0
             yield xb, yb, mask
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSchedule:
+    """A fixed-shape batch plan for one federated round across a client cohort.
+
+    Every client's epoch is padded to ``steps_per_epoch`` with dummy batches
+    whose ``step_valid`` flag is False (and whose example mask is all-zero),
+    so the whole cohort shares one static ``(clients, steps, batch, ...)``
+    shape and a single compilation serves any participant mix.
+    """
+
+    x: np.ndarray           # (C, T, B, *feature_dims)
+    y: np.ndarray           # (C, T, B)
+    mask: np.ndarray        # (C, T, B) float32 per-example validity
+    step_valid: np.ndarray  # (C, T) bool — False on dummy padding steps
+    weights: np.ndarray     # (C,) float32 local sample counts n_c
+    steps_per_epoch: int
+    local_epochs: int
+
+    @property
+    def num_clients(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def total_steps(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def real_steps(self) -> int:
+        return int(self.step_valid.sum())
+
+
+def local_round_steps(n: int, batch_size: int, local_epochs: int) -> int:
+    """Real local steps one client runs per round: ceil(n / B) * epochs.
+
+    The single source of truth for step accounting — both engines report
+    totals through this so their ``total_local_steps`` always agree.
+    """
+    return -(-int(n) // batch_size) * local_epochs
+
+
+def cohort_steps_per_epoch(sizes: Sequence[int], batch_size: int) -> int:
+    """Common per-epoch step count: the slowest client's ceil(n_c / B)."""
+    if not sizes:
+        raise ValueError("empty cohort")
+    return max(local_round_steps(n, batch_size, 1) for n in sizes)
+
+
+def build_cohort_schedule(
+    datasets: Sequence[ArrayDataset],
+    batch_size: int,
+    local_epochs: int,
+    rng: np.random.Generator,
+    steps_per_epoch: int | None = None,
+) -> CohortSchedule:
+    """Stack every client's shuffled, padded epoch batches into one array.
+
+    Consumes ``rng`` in exactly the order the sequential engine does
+    (client-major, one permutation per epoch), so a vectorized round is
+    bit-for-bit fed the same batches as the sequential reference.
+    """
+    if not datasets:
+        raise ValueError("empty cohort")
+    spe = steps_per_epoch or cohort_steps_per_epoch([len(d) for d in datasets], batch_size)
+    total = spe * local_epochs
+    feat = datasets[0].x.shape[1:]
+    n_clients = len(datasets)
+
+    x = np.zeros((n_clients, total, batch_size, *feat), dtype=datasets[0].x.dtype)
+    y = np.zeros((n_clients, total, batch_size), dtype=datasets[0].y.dtype)
+    mask = np.zeros((n_clients, total, batch_size), dtype=np.float32)
+    step_valid = np.zeros((n_clients, total), dtype=bool)
+
+    for c, dataset in enumerate(datasets):
+        if dataset.x.shape[1:] != feat:
+            raise ValueError("all cohort clients must share a feature shape")
+        for epoch in range(local_epochs):
+            t = epoch * spe
+            for xb, yb, mb in dataset.padded_batches(batch_size, rng):
+                if t >= (epoch + 1) * spe:
+                    raise ValueError(
+                        f"client {c} produced more than steps_per_epoch={spe} batches"
+                    )
+                x[c, t], y[c, t], mask[c, t] = xb, yb, mb
+                step_valid[c, t] = True
+                t += 1
+            # remaining slots of this epoch stay dummy (zeros, step_valid False)
+
+    return CohortSchedule(
+        x=x,
+        y=y,
+        mask=mask,
+        step_valid=step_valid,
+        weights=np.asarray([len(d) for d in datasets], dtype=np.float32),
+        steps_per_epoch=spe,
+        local_epochs=local_epochs,
+    )
 
 
 @dataclasses.dataclass

@@ -1,0 +1,78 @@
+"""Version-portable wrappers over jax mesh / sharding APIs.
+
+The production meshes are written against the jax >= 0.5 explicit-sharding
+surface (``jax.sharding.AxisType``, ``set_mesh``, ``get_abstract_mesh``);
+the pinned environment ships jax 0.4.37, where the active mesh lives in
+``thread_resources`` and is entered with the classic ``with mesh:`` block.
+Everything that touches those APIs goes through this module so the rest of
+the codebase is version-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+from typing import Any
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    _HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.x: meshes have no axis types; provide a stand-in
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _HAS_AXIS_TYPE = False
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    if _HAS_AXIS_TYPE:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Activate ``mesh`` for the enclosed block on any supported jax.
+
+    jax >= 0.5 exposes ``jax.sharding.set_mesh``; on 0.4.x the classic
+    ``with mesh:`` context sets ``thread_resources`` which is what
+    ``with_sharding_constraint`` consults there.
+    """
+    setter = getattr(jax.sharding, "set_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def get_active_mesh() -> Any | None:
+    """The mesh currently in scope, or None.
+
+    Returns whatever mesh object the running jax tracks (abstract on >= 0.5,
+    the physical ``Mesh`` from ``thread_resources`` on 0.4.x); callers only
+    rely on ``.axis_names`` / ``.empty`` / ``.shape``, present on both.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is None or mesh.empty:
+            return None
+        return mesh
+    from jax._src import mesh as mesh_lib  # jax 0.4.x fallback
+
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return None
+    return mesh

@@ -19,6 +19,8 @@ from typing import Any, Sequence
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.distribution.compat import get_active_mesh
+
 AxisLike = Any  # None | str | tuple[str, ...]
 
 DATA = "data"
@@ -27,10 +29,7 @@ POD = "pod"
 
 
 def active_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        return None
-    return mesh
+    return get_active_mesh()
 
 
 def clean_spec(spec: Sequence[AxisLike] | P) -> P | None:

@@ -63,6 +63,11 @@ class ExperimentConfig:
     gamma_sa: float = 0.5
     gamma_th: float = 0.1
     use_pallas: bool = False
+    # Federated training engine: "vectorized" (one jitted vmap per round)
+    # or "sequential" (per-client Python loop, the reference oracle).
+    engine: str = "vectorized"
+    # Vectorized engine: clients per vmapped call (None = whole cohort).
+    cohort_chunk: int | None = None
 
 
 def recruitment_for(setting: str, exp: ExperimentConfig) -> RecruitmentConfig | None:
@@ -130,6 +135,8 @@ def run_setting(
             participation_fraction=participation_for(setting, exp),
             recruitment=recruitment_for(setting, exp),
             seed=seed,
+            engine=exp.engine,
+            cohort_chunk=exp.cohort_chunk,
         )
         server = FederatedServer(fed_cfg, clients, loss_fn, optimizer)
         result = server.run(init_params, progress=progress)

@@ -1,8 +1,18 @@
 from repro.federated.central import CentralConfig, CentralRunResult, train_central
 from repro.federated.client import LocalTrainer
-from repro.federated.fedavg import aggregate, apply_delta, delta, params_nbytes, tree_allclose
+from repro.federated.cohort import CohortTrainer
+from repro.federated.fedavg import (
+    aggregate,
+    aggregate_stacked,
+    apply_delta,
+    delta,
+    params_nbytes,
+    tree_allclose,
+    weighted_sum_stacked,
+)
 from repro.federated.selection import select_clients
 from repro.federated.server import (
+    ENGINES,
     FederatedConfig,
     FederatedRunResult,
     FederatedServer,
@@ -14,12 +24,16 @@ __all__ = [
     "CentralRunResult",
     "train_central",
     "LocalTrainer",
+    "CohortTrainer",
     "aggregate",
+    "aggregate_stacked",
+    "weighted_sum_stacked",
     "apply_delta",
     "delta",
     "params_nbytes",
     "tree_allclose",
     "select_clients",
+    "ENGINES",
     "FederatedConfig",
     "FederatedRunResult",
     "FederatedServer",

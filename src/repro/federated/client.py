@@ -14,7 +14,7 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
-from repro.data.pipeline import ClientDataset
+from repro.data.pipeline import ClientDataset, local_round_steps
 from repro.optim.adamw import AdamW, apply_updates
 
 PyTree = Any
@@ -67,5 +67,4 @@ class LocalTrainer:
         return params, mean_loss, client.n_train
 
     def steps_per_round(self, client: ClientDataset) -> int:
-        batches = -(-client.n_train // self.batch_size)  # ceil
-        return batches * self.local_epochs
+        return local_round_steps(client.n_train, self.batch_size, self.local_epochs)

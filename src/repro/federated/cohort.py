@@ -1,0 +1,175 @@
+"""Vectorized cohort training: one jitted vmap trains every participant.
+
+The sequential engine (``repro.federated.client.LocalTrainer``) dispatches
+one jitted step per client per batch from Python, so a round's wall clock
+scales linearly with federation size.  Here the global parameters are
+broadcast across a leading client axis and a whole FedAvg round — every
+participant's ``local_epochs`` of AdamW steps — runs inside a single
+``jax.lax.scan`` over a ``jax.vmap``-ed per-client step, on a fixed-shape
+``(clients, steps, batch, ...)`` schedule from
+``repro.data.pipeline.build_cohort_schedule``.
+
+Parity with the sequential oracle is exact by construction:
+
+* the schedule consumes the shared numpy RNG in the same client-major order
+  the sequential loop does, so each client sees identical shuffled batches;
+* each client's jax PRNG chain is advanced only on its *real* steps (dummy
+  padding steps are masked to exact no-ops on params, optimizer state, and
+  the key), so per-step dropout keys match the sequential path;
+* aggregation is the same FedAvg weighted mean, as one ``jnp.tensordot``
+  over the stacked client axis.
+
+Multi-device: pass ``mesh`` to shard the client axis over the mesh's
+``data`` axis with ``shard_map`` (clients must divide the axis size).
+``cohort_chunk`` bounds peak memory by processing participants in chunks
+with an unnormalized weighted-sum accumulator across chunks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.data.pipeline import (
+    ClientDataset,
+    build_cohort_schedule,
+    cohort_steps_per_epoch,
+    local_round_steps,
+)
+from repro.federated.fedavg import weighted_sum_stacked
+from repro.optim.adamw import AdamW, apply_updates
+
+PyTree = Any
+LossFn = Callable[..., Any]  # loss(params, batch, rng) -> scalar
+
+
+@dataclasses.dataclass
+class CohortTrainer:
+    """Trains a whole cohort of clients per round in one jitted computation."""
+
+    loss_fn: LossFn
+    optimizer: AdamW
+    batch_size: int
+    local_epochs: int
+    # Max clients per vmapped call; None = the whole cohort at once.
+    cohort_chunk: int | None = None
+    # Optional device mesh: shard the client axis over its "data" axis.
+    mesh: Any = None
+
+    def __post_init__(self) -> None:
+        def client_step(params, opt_state, key_data, batch, valid):
+            """One masked local step; dummy steps are exact no-ops."""
+            keys = jax.random.split(jax.random.wrap_key_data(key_data))
+            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch, keys[1])
+            updates, opt_new = self.optimizer.update(grads, opt_state, params)
+            params_new = apply_updates(params, updates)
+            keep = lambda new, old: jnp.where(valid, new, old)
+            params = jax.tree.map(keep, params_new, params)
+            opt_state = jax.tree.map(keep, opt_new, opt_state)
+            key_data = jnp.where(valid, jax.random.key_data(keys[0]), key_data)
+            return params, opt_state, key_data, jnp.where(valid, loss, jnp.nan)
+
+        def train_one(params, x_c, y_c, m_c, v_c, key_data):
+            """All local epochs for one client: a scan over the step axis."""
+            opt_state = self.optimizer.init(params)
+
+            def step(carry, inp):
+                p, s, kd = carry
+                xb, yb, mb, valid = inp
+                p, s, kd, loss = client_step(p, s, kd, (xb, yb, mb), valid)
+                return (p, s, kd), loss
+
+            (params, _, _), losses = jax.lax.scan(
+                step, (params, opt_state, key_data), (x_c, y_c, m_c, v_c)
+            )
+            return params, losses
+
+        def train_stacked(params, x, y, mask, valid, key_data):
+            return jax.vmap(
+                lambda xc, yc, mc, vc, kd: train_one(params, xc, yc, mc, vc, kd)
+            )(x, y, mask, valid, key_data)
+
+        if self.mesh is not None and "data" in self.mesh.axis_names:
+            from jax.experimental.shard_map import shard_map
+
+            train_stacked = shard_map(
+                train_stacked,
+                mesh=self.mesh,
+                in_specs=(P(), P("data"), P("data"), P("data"), P("data"), P("data")),
+                out_specs=(P("data"), P("data")),
+                check_rep=False,
+            )
+
+        def cohort_round(params, x, y, mask, valid, key_data, weights):
+            stacked_params, losses = train_stacked(params, x, y, mask, valid, key_data)
+            # Per-client mean loss over the LAST epoch's real steps (matching
+            # the sequential LocalTrainer's reported loss).
+            spe = losses.shape[1] // self.local_epochs
+            last, last_valid = losses[:, -spe:], valid[:, -spe:]
+            count = jnp.maximum(last_valid.sum(axis=1), 1)
+            per_loss = jnp.where(last_valid, last, 0.0).sum(axis=1) / count
+            return weighted_sum_stacked(stacked_params, weights), per_loss
+
+        self._round = jax.jit(cohort_round)
+
+    def train_cohort(
+        self,
+        params: PyTree,
+        clients: Sequence[ClientDataset],
+        rng: np.random.Generator,
+        client_keys: Sequence[jax.Array],
+        steps_per_epoch: int | None = None,
+    ) -> tuple[PyTree, np.ndarray, int]:
+        """One FedAvg round over ``clients``.
+
+        ``client_keys`` holds one jax PRNG key per client, in the same order
+        the sequential engine would have split them.  Pass a federation-wide
+        ``steps_per_epoch`` to pin the schedule's step axis across rounds —
+        otherwise it tracks this cohort's largest client and a different
+        participant mix can retrigger compilation.  Returns the round's
+        aggregated params, per-client mean local losses, and the number of
+        *real* (unpadded) local steps executed.
+        """
+        if len(clients) != len(client_keys):
+            raise ValueError("need exactly one PRNG key per client")
+        sizes = [c.n_train for c in clients]
+        spe = steps_per_epoch or cohort_steps_per_epoch(sizes, self.batch_size)
+        chunk = self.cohort_chunk or len(clients)
+        if chunk <= 0:
+            raise ValueError(f"cohort_chunk must be positive, got {chunk}")
+
+        acc: PyTree | None = None
+        total_weight = 0.0
+        per_losses = np.full(len(clients), np.nan, dtype=np.float32)
+        for start in range(0, len(clients), chunk):
+            part = clients[start : start + chunk]
+            sched = build_cohort_schedule(
+                [c.train for c in part],
+                self.batch_size,
+                self.local_epochs,
+                rng,
+                steps_per_epoch=spe,
+            )
+            key_data = jnp.stack(
+                [jax.random.key_data(k) for k in client_keys[start : start + chunk]]
+            )
+            wsum, losses = self._round(
+                params, sched.x, sched.y, sched.mask, sched.step_valid, key_data, sched.weights
+            )
+            acc = wsum if acc is None else jax.tree.map(jnp.add, acc, wsum)
+            total_weight += float(sched.weights.sum())
+            per_losses[start : start + len(part)] = np.asarray(losses)
+
+        new_params = jax.tree.map(
+            lambda t, ref: (t / total_weight).astype(ref.dtype), acc, params
+        )
+        real_steps = sum(local_round_steps(n, self.batch_size, self.local_epochs) for n in sizes)
+        return new_params, per_losses, real_steps
+
+    def steps_per_round(self, client: ClientDataset) -> int:
+        return local_round_steps(client.n_train, self.batch_size, self.local_epochs)

@@ -25,15 +25,40 @@ def aggregate(params_list: Sequence[PyTree], weights: Sequence[float] | None = N
     w = np.asarray(weights, dtype=np.float64)
     if np.any(w < 0) or w.sum() <= 0:
         raise ValueError(f"invalid aggregation weights: {weights}")
-    w = (w / w.sum()).astype(np.float32)
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *params_list)
+    return aggregate_stacked(stacked, (w / w.sum()).astype(np.float32))
 
-    def _avg(*leaves):
-        out = leaves[0] * w[0]
-        for wi, leaf in zip(w[1:], leaves[1:]):
-            out = out + wi * leaf
-        return out
 
-    return jax.tree.map(_avg, *params_list)
+def aggregate_stacked(stacked: PyTree, weights) -> PyTree:
+    """FedAvg over a client-stacked pytree in one contraction per leaf.
+
+    Every leaf carries a leading client axis; the weighted average is a
+    single ``jnp.tensordot`` over that axis, which XLA fuses far better than
+    a per-client Python loop.  Safe to call inside jit (no value-dependent
+    validation); weights need not be pre-normalized.
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+
+    def _avg(leaf):
+        # Contract in the leaf's own precision (promoted to at least f32)
+        # so float64 params keep their full accuracy.
+        ct = jnp.promote_types(leaf.dtype, jnp.float32)
+        out = jnp.tensordot(w.astype(ct), leaf.astype(ct), axes=((0,), (0,)))
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(_avg, stacked)
+
+
+def weighted_sum_stacked(stacked: PyTree, weights) -> PyTree:
+    """Unnormalized ``sum_c w_c * leaf_c`` — the chunked-cohort accumulator."""
+    w = jnp.asarray(weights, dtype=jnp.float32)
+
+    def _sum(leaf):
+        ct = jnp.promote_types(leaf.dtype, jnp.float32)
+        return jnp.tensordot(w.astype(ct), leaf.astype(ct), axes=((0,), (0,)))
+
+    return jax.tree.map(_sum, stacked)
 
 
 def delta(new: PyTree, old: PyTree) -> PyTree:

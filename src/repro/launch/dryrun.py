@@ -44,6 +44,7 @@ from repro.launch.hlo_analysis import (
     memory_summary,
     model_flops_estimate,
 )
+from repro.distribution.compat import set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (
     INPUT_SHAPES,
@@ -141,7 +142,7 @@ def lower_combo(
         )
 
     p_specs = params_specs(model)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         p_shardings = params_shardings(p_specs, cfg, mesh)
 
         t0 = time.perf_counter()
@@ -242,7 +243,7 @@ def _lower_fed_round(
     client_spec = daxes if len(daxes) > 1 else daxes[0]
 
     p_specs = params_specs(model)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         base_shardings = params_shardings(p_specs, cfg, mesh)
 
         def stack_spec(l):

@@ -14,19 +14,18 @@ FedAvg aggregation across silos is an all-reduce over ``pod``.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.distribution.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU smoke tests of the sharded paths."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

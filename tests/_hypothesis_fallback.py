@@ -1,0 +1,106 @@
+"""Deterministic stand-in for ``hypothesis`` when the package is absent.
+
+CI installs the real hypothesis from the ``test`` extra; this fallback keeps
+the property tests collectable and meaningful in minimal environments (the
+baked container has no hypothesis and no network).  It implements just the
+surface these tests use — ``given``/``settings`` decorators and the
+``integers``/``floats``/``lists``/``tuples`` strategies with ``filter``/
+``map`` — and replays a fixed number of seeded pseudo-random examples
+instead of doing real property search.  Imported by ``conftest.py``, which
+registers it under the ``hypothesis`` module names.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable
+
+_DEFAULT_EXAMPLES = 12
+_MAX_EXAMPLES = 25  # cap so the stub never exceeds real-hypothesis budgets
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]) -> None:
+        self._draw = draw
+
+    def filter(self, predicate: Callable[[Any], bool]) -> "_Strategy":
+        def draw(rnd: random.Random) -> Any:
+            for _ in range(1000):
+                value = self._draw(rnd)
+                if predicate(value):
+                    return value
+            raise ValueError("filter predicate rejected 1000 consecutive examples")
+
+        return _Strategy(draw)
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rnd: fn(self._draw(rnd)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(
+    min_value: float,
+    max_value: float,
+    allow_nan: bool | None = None,
+    allow_infinity: bool | None = None,
+    **_: Any,
+) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rnd: pool[rnd.randrange(len(pool))])
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10, **_: Any) -> _Strategy:
+    def draw(rnd: random.Random):
+        return [elements._draw(rnd) for _ in range(rnd.randint(min_size, max_size))]
+
+    return _Strategy(draw)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rnd: tuple(e._draw(rnd) for e in elements))
+
+
+def given(**strategies: _Strategy):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any):
+            n_examples = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            for example in range(n_examples):
+                rnd = random.Random(0x5EED + example)
+                drawn = {name: s._draw(rnd) for name, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper._stub_max_examples = _DEFAULT_EXAMPLES
+        # Hide the drawn parameters from pytest's fixture resolution: keep
+        # only the arguments given() does not supply (e.g. real fixtures).
+        params = [
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples: int | None = None, deadline: Any = None, **_: Any):
+    def decorator(fn):
+        if max_examples is not None and hasattr(fn, "_stub_max_examples"):
+            fn._stub_max_examples = min(max_examples, _MAX_EXAMPLES)
+        return fn
+
+    return decorator

@@ -1,0 +1,27 @@
+"""Shared test plumbing.
+
+If real ``hypothesis`` is installed (the ``test`` extra in pyproject.toml;
+CI always has it) the property tests use it unchanged.  In minimal
+environments the deterministic fallback in ``_hypothesis_fallback`` is
+registered under the ``hypothesis`` module names before test collection so
+``from hypothesis import given, ...`` keeps working.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_fallback as _fallback  # tests/ is on sys.path via pytest rootdir insertion
+
+    module = types.ModuleType("hypothesis")
+    module.given = _fallback.given
+    module.settings = _fallback.settings
+    module.strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists", "tuples"):
+        setattr(module.strategies, name, getattr(_fallback, name))
+    sys.modules["hypothesis"] = module
+    sys.modules["hypothesis.strategies"] = module.strategies

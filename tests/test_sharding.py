@@ -7,6 +7,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
+from repro.distribution.compat import set_mesh
 from repro.distribution.sharding import clean_spec, constrain
 from repro.launch.mesh import data_axes, make_host_mesh
 from repro.launch.specs import (
@@ -31,7 +32,7 @@ def test_constrain_is_noop_without_mesh():
 
 def test_clean_spec_drops_unknown_axes():
     mesh = make_host_mesh()
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         spec = clean_spec(("pod", "data", "bogus"))
         assert spec == P(None, "data", None)
         spec2 = clean_spec((("pod", "data"), "model"))
@@ -40,7 +41,7 @@ def test_clean_spec_drops_unknown_axes():
 
 def test_constrain_under_host_mesh():
     mesh = make_host_mesh()
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         @jax.jit
         def f(x):
             return constrain(x * 2, "data", "model")
@@ -54,7 +55,7 @@ def test_param_shardings_cover_every_leaf():
         cfg = get_config(arch).reduced()
         model = Model(cfg)
         specs = params_specs(model)
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = params_shardings(specs, cfg, mesh)
         n_leaves = len(jax.tree.leaves(specs))
         n_shardings = len(jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec")))
@@ -122,7 +123,7 @@ def test_cache_shardings_build(tmp_path):
         cfg = config_for_shape(get_config(arch), shape)
         model = Model(cfg)
         cs = cache_specs(model, shape)
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = cache_shardings(cs, cfg, mesh)
         assert len(jax.tree.leaves(cs)) == len(jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec")))
 
