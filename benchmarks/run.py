@@ -170,6 +170,58 @@ def bench_cohort(
 
 
 # --------------------------------------------------------------------------
+# paper-scale federation: all five settings at 189 clients, both engines
+# --------------------------------------------------------------------------
+
+def bench_paper189(
+    rounds: int = 3,
+    total_stays: int = 4096,
+    mesh_auto: bool = False,
+    out_path: str = "BENCH_paper189.json",
+) -> None:
+    """The paper's full 189-client experiment grid (section 6) end to end.
+
+    Every model setting (central / federated ac, sc, arc, src) runs at the
+    full 189-hospital federation under both engines; per-setting rows report
+    steady-state microseconds per round and the vectorized-over-sequential
+    speedup, plus a donated-vs-plain buffer memory probe.  Per-hospital data
+    is CI-scaled (the client axis is the paper-scale dimension); pass
+    ``--mesh-auto`` under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    to run the client axis through the shard_map path.
+    """
+    from repro.experiments.paper import run_paper_scale
+
+    report = run_paper_scale(
+        rounds=rounds,
+        total_stays=total_stays,
+        mesh="auto" if mesh_auto else None,
+    )
+    for setting, row in report["settings"].items():
+        for engine, entry in row.items():
+            if engine == "speedup":
+                continue
+            derived = f"msle={entry['metrics']['msle']:.4f}"
+            if engine == "vectorized" and "speedup" in row:
+                derived += f";speedup={row['speedup']:.2f}x"
+            if entry.get("time_unit", "round") != "round":
+                derived += f";per_{entry['time_unit']}"
+            emit(f"paper189_{setting}_{engine}", 1e6 * entry["round_time_s"], derived)
+    mem = report["memory"]
+    emit(
+        "paper189_memory_donated",
+        float(mem["donated"]["peak_live_bytes"]),
+        f"peak_bufs={mem['donated']['peak_live_buffers']}",
+    )
+    emit(
+        "paper189_memory_plain",
+        float(mem["plain"]["peak_live_bytes"]),
+        f"donated_lower={mem['donated_peak_lower']}",
+    )
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}", flush=True)
+
+
+# --------------------------------------------------------------------------
 # kernels
 # --------------------------------------------------------------------------
 
@@ -244,15 +296,30 @@ def main() -> None:
     ap.add_argument("--skip-paper", action="store_true")
     ap.add_argument(
         "--mode",
-        choices=["all", "cohort", "kernels", "paper"],
+        choices=["all", "cohort", "kernels", "paper", "paper189"],
         default="all",
-        help="'cohort' times sequential vs vectorized federated rounds only",
+        help="'cohort' times sequential vs vectorized federated rounds only; "
+        "'paper189' runs the full five-setting grid at 189 clients",
     )
     ap.add_argument("--cohort-clients", type=int, nargs="+", default=[8, 32, 128])
+    ap.add_argument("--paper189-rounds", type=int, default=3)
+    ap.add_argument("--paper189-stays", type=int, default=189 * 23)
+    ap.add_argument(
+        "--mesh-auto", action="store_true",
+        help="paper189: shard the client axis over all visible devices",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    if args.mode == "paper189":
+        bench_paper189(
+            rounds=args.paper189_rounds,
+            total_stays=args.paper189_stays,
+            mesh_auto=args.mesh_auto,
+        )
+        print(f"# total benchmark time: {time.time()-t0:.1f}s")
+        return
     if args.mode in ("all", "cohort"):
         bench_cohort(client_counts=tuple(args.cohort_clients))
     if args.mode in ("all", "kernels"):

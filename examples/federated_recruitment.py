@@ -7,6 +7,24 @@ with and without client recruitment, several hundred local steps per model.
 Produces the SC-vs-SRC comparison that is the paper's headline claim:
 recruited federations match or beat standard FedAvg at a fraction of the
 training cost.
+
+Paper-scale runs
+----------------
+The full 189-client experiment grid (all five section-6 model settings,
+both engines, per-setting round times, the donated-vs-plain buffer memory
+probe) is a benchmark mode of its own and writes ``BENCH_paper189.json``:
+
+    PYTHONPATH=src python benchmarks/run.py --mode paper189
+
+To push the cohort's client axis through the multi-device ``shard_map``
+path (CI's second matrix leg does this on every PR), force host devices
+before jax initializes and ask for the auto data mesh:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python benchmarks/run.py --mode paper189 --mesh-auto
+
+This driver accepts the same engine controls (``--engine``,
+``--cohort-chunk``, ``--mesh auto``, ``--no-donate``) for one-off runs.
 """
 
 import argparse
@@ -27,11 +45,23 @@ def main() -> None:
         "--cohort-chunk", type=int, default=None,
         help="vectorized engine: clients per vmapped call (bounds memory)",
     )
+    ap.add_argument(
+        "--mesh", choices=["auto"], default=None,
+        help="vectorized engine: shard the client axis over all visible devices",
+    )
+    ap.add_argument(
+        "--no-donate", action="store_true",
+        help="vectorized engine: keep round buffers alive (memory diffing)",
+    )
     args = ap.parse_args()
 
     # paper-faithful settings, trained on the selected engine
     exp = ExperimentConfig(
-        cohort_scale=args.scale, engine=args.engine, cohort_chunk=args.cohort_chunk
+        cohort_scale=args.scale,
+        engine=args.engine,
+        cohort_chunk=args.cohort_chunk,
+        mesh=args.mesh,
+        donate_buffers=not args.no_donate,
     )
     print(f"engine: {args.engine}")
     cohort = build_cohort(exp, seed=args.seed)

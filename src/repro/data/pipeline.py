@@ -152,6 +152,33 @@ def build_cohort_schedule(
     )
 
 
+def pad_cohort_schedule(sched: CohortSchedule, multiple: int) -> CohortSchedule:
+    """Pad the client axis with weight-0 dummy clients to a multiple.
+
+    The shard_map path requires the client axis to divide the mesh's data
+    axis; dummy clients have every step masked invalid (exact no-ops) and
+    zero aggregation weight, so they change nothing but the array shape.
+    """
+    if multiple <= 1:
+        return sched
+    pad = -sched.num_clients % multiple
+    if pad == 0:
+        return sched
+
+    def pad_clients(a: np.ndarray) -> np.ndarray:
+        return np.concatenate([a, np.zeros((pad, *a.shape[1:]), dtype=a.dtype)])
+
+    return CohortSchedule(
+        x=pad_clients(sched.x),
+        y=pad_clients(sched.y),
+        mask=pad_clients(sched.mask),
+        step_valid=pad_clients(sched.step_valid),
+        weights=pad_clients(sched.weights),
+        steps_per_epoch=sched.steps_per_epoch,
+        local_epochs=sched.local_epochs,
+    )
+
+
 @dataclasses.dataclass
 class ClientDataset:
     """One hospital's local data (train + val splits)."""

@@ -62,6 +62,12 @@ class CohortConfig:
     # data quality; widen (e.g. (0.7, 2.5)) to model sites with poor charting
     # whose updates actively hurt the federation (the recruitment target).
     hospital_noise_scale: tuple[float, float] = (1.0, 1.0)
+    # "global" = one patient-level permutation across all hospitals (the
+    # paper's protocol); "stratified" = the same fractions applied within
+    # every hospital, so local split sizes carry no sampling noise (the
+    # standard multi-site alternative — and what keeps the vectorized
+    # engine's shared step axis tight at paper scale).
+    split_mode: str = "global"
     seed: int = 0
 
     def scaled(self, factor: float) -> "CohortConfig":
@@ -101,9 +107,18 @@ class Cohort:
         return self.split == split
 
     def fused_features(self) -> np.ndarray:
-        """Temporal fused with broadcast static features: (N, 24, 38)."""
-        static_tiled = np.repeat(self.x_static[:, None, :], self.x_temporal.shape[1], axis=1)
-        return np.concatenate([self.x_temporal, static_tiled], axis=-1).astype(np.float32)
+        """Temporal fused with broadcast static features: (N, 24, 38).
+
+        Cached: at full paper scale this is a ~330 MB materialization, and
+        drivers like ``run_paper_scale`` walk the same cohort through many
+        settings/engines — building it once instead of per run_setting call.
+        """
+        cached = getattr(self, "_fused", None)
+        if cached is None:
+            static_tiled = np.repeat(self.x_static[:, None, :], self.x_temporal.shape[1], axis=1)
+            cached = np.concatenate([self.x_temporal, static_tiled], axis=-1).astype(np.float32)
+            self._fused = cached
+        return cached
 
     def client_arrays(self, hospital: int, split: int) -> tuple[np.ndarray, np.ndarray]:
         """(fused features, y) for one hospital and split."""
@@ -189,13 +204,25 @@ def generate_cohort(config: CohortConfig | None = None, seed: int | None = None)
     for k in range(4):
         x_static[:, k] = (unit == k).astype(np.float32)
 
-    # --- splits (global, stratified across hospitals by shuffling) ---------
+    # --- splits ------------------------------------------------------------
     split = np.full(n, Cohort.TEST, dtype=np.int8)
-    perm = rng.permutation(n)
-    n_train = int(round(TRAIN_FRACTION * n))
-    n_val = int(round(VAL_FRACTION * n))
-    split[perm[:n_train]] = Cohort.TRAIN
-    split[perm[n_train : n_train + n_val]] = Cohort.VAL
+    if cfg.split_mode == "stratified":
+        # the same fractions within every hospital: per-client split sizes
+        # are deterministic in the hospital size, no cross-site noise
+        for h in range(cfg.num_hospitals):
+            idx = rng.permutation(np.flatnonzero(hospital_id == h))
+            k_train = int(round(TRAIN_FRACTION * len(idx)))
+            k_val = int(round(VAL_FRACTION * len(idx)))
+            split[idx[:k_train]] = Cohort.TRAIN
+            split[idx[k_train : k_train + k_val]] = Cohort.VAL
+    elif cfg.split_mode == "global":
+        perm = rng.permutation(n)
+        n_train = int(round(TRAIN_FRACTION * n))
+        n_val = int(round(VAL_FRACTION * n))
+        split[perm[:n_train]] = Cohort.TRAIN
+        split[perm[n_train : n_train + n_val]] = Cohort.VAL
+    else:
+        raise ValueError(f"unknown split_mode {cfg.split_mode!r}")
 
     return Cohort(
         x_temporal=x_temporal,

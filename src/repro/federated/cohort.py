@@ -16,36 +16,77 @@ Parity with the sequential oracle is exact by construction:
 * each client's jax PRNG chain is advanced only on its *real* steps (dummy
   padding steps are masked to exact no-ops on params, optimizer state, and
   the key), so per-step dropout keys match the sequential path;
-* aggregation is the same FedAvg weighted mean, as one ``jnp.tensordot``
-  over the stacked client axis.
+* aggregation is the same FedAvg weighted mean: per-chunk unnormalized
+  weighted sums accumulated into a running pytree, normalized once at the
+  end of the round.
 
-Multi-device: pass ``mesh`` to shard the client axis over the mesh's
-``data`` axis with ``shard_map`` (clients must divide the axis size).
-``cohort_chunk`` bounds peak memory by processing participants in chunks
-with an unnormalized weighted-sum accumulator across chunks.
+Memory (the 189-client paper federation): the round step is jitted with
+``donate_argnums`` so the cross-chunk accumulator is updated *in place*
+(XLA aliases the donated input to the output — no second params-sized
+buffer per chunk), and the chunk's device-resident schedule buffers are
+released the moment the step that consumed them returns.  On TPU/GPU the
+schedule buffers are additionally marked donated so XLA can reuse their
+memory for round temporaries; XLA:CPU cannot consume a donation with no
+aliasable output, so there the eager release is the mechanism.  Peak
+live-buffer footprint is tracked per round in ``last_round_stats`` (see
+``repro.launch.hlo_analysis.live_buffer_stats``) — the donated path holds
+one chunk of schedule in device memory where the plain path holds two.
+
+Multi-device: pass ``mesh`` (or the string ``"auto"`` to build a 1-D
+``("data",)`` mesh over every local device) to shard the client axis with
+``shard_map``.  Cohorts that do not divide the axis size are padded with
+weight-0 dummy clients whose steps are all masked no-ops, and aggregation
+is a single cross-shard ``psum`` of the per-shard weighted sums — the only
+collective in the round.  ``cohort_chunk`` bounds peak memory by processing
+participants in chunks through the same donated accumulator.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.data.pipeline import (
     ClientDataset,
     build_cohort_schedule,
     cohort_steps_per_epoch,
     local_round_steps,
+    pad_cohort_schedule,
 )
 from repro.federated.fedavg import weighted_sum_stacked
+from repro.launch.hlo_analysis import live_buffer_stats
 from repro.optim.adamw import AdamW, apply_updates
 
 PyTree = Any
 LossFn = Callable[..., Any]  # loss(params, batch, rng) -> scalar
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _chain_split(key_data, n: int):
+    def step(kd, _):
+        ks = jax.random.split(jax.random.wrap_key_data(kd))
+        return jax.random.key_data(ks[0]), jax.random.key_data(ks[1])
+
+    return jax.lax.scan(step, key_data, None, length=n)
+
+
+def chain_split_keys(key: jax.Array, n: int) -> tuple[jax.Array, np.ndarray]:
+    """``n`` sequential ``jax.random.split`` calls in one jitted scan.
+
+    Bit-identical to the Python loop ``key, sub = jax.random.split(key)``
+    repeated ``n`` times (the sequential server's per-client key chain), but
+    one dispatch instead of ``n`` — at 189 clients the chained host loop
+    costs ~0.2s per round, a measurable slice of a vectorized round.
+    Returns the advanced key and the ``(n, ...)`` stacked sub-key data.
+    """
+    kd, subs = _chain_split(jax.random.key_data(key), n)
+    return jax.random.wrap_key_data(kd), np.asarray(subs)
 
 
 @dataclasses.dataclass
@@ -59,9 +100,31 @@ class CohortTrainer:
     # Max clients per vmapped call; None = the whole cohort at once.
     cohort_chunk: int | None = None
     # Optional device mesh: shard the client axis over its "data" axis.
+    # "auto" builds a ("data",) mesh over every local device (None if only
+    # one device is visible — the degenerate mesh buys nothing).
     mesh: Any = None
+    # Donate round buffers to the jitted step: the cross-chunk accumulator
+    # is aliased in place and each chunk's schedule is released as soon as
+    # the step consuming it returns.  Turn off only to diff memory behavior.
+    donate: bool = True
+    # Sample live-buffer peaks into last_round_stats (two process-wide
+    # jax.live_arrays() walks per chunk).  Cheap, but disable on
+    # latency-critical loops that never read the stats.
+    track_stats: bool = True
+    # Peak live-buffer footprint of the most recent train_cohort call
+    # (deltas vs the call's entry), populated after every round.
+    last_round_stats: dict[str, Any] | None = dataclasses.field(default=None, init=False)
 
     def __post_init__(self) -> None:
+        if isinstance(self.mesh, str):
+            if self.mesh != "auto":
+                raise ValueError(f"mesh must be a Mesh, None, or 'auto'; got {self.mesh!r}")
+            from repro.launch.mesh import make_data_mesh
+
+            self.mesh = make_data_mesh() if jax.device_count() > 1 else None
+        mesh = self.mesh if self.mesh is not None and "data" in self.mesh.axis_names else None
+        self._num_shards = int(mesh.shape["data"]) if mesh is not None else 1
+
         def client_step(params, opt_state, key_data, batch, valid):
             """One masked local step; dummy steps are exact no-ops."""
             keys = jax.random.split(jax.random.wrap_key_data(key_data))
@@ -89,63 +152,116 @@ class CohortTrainer:
             )
             return params, losses
 
-        def train_stacked(params, x, y, mask, valid, key_data):
-            return jax.vmap(
+        def train_block(params, x, y, mask, valid, key_data, weights, axis_name=None):
+            """Train a block of clients and reduce to one weighted param sum.
+
+            Inside shard_map each device holds one client shard and
+            ``axis_name`` folds the cross-shard reduction into the same
+            weighted sum — one psum of a params-sized tree, the round's
+            only collective."""
+            stacked, losses = jax.vmap(
                 lambda xc, yc, mc, vc, kd: train_one(params, xc, yc, mc, vc, kd)
             )(x, y, mask, valid, key_data)
+            return weighted_sum_stacked(stacked, weights, axis_name=axis_name), losses
 
-        if self.mesh is not None and "data" in self.mesh.axis_names:
+        if mesh is not None:
             from jax.experimental.shard_map import shard_map
 
-            train_stacked = shard_map(
-                train_stacked,
-                mesh=self.mesh,
-                in_specs=(P(), P("data"), P("data"), P("data"), P("data"), P("data")),
-                out_specs=(P("data"), P("data")),
+            train_block = shard_map(
+                functools.partial(train_block, axis_name="data"),
+                mesh=mesh,
+                in_specs=(
+                    P(), P("data"), P("data"), P("data"), P("data"), P("data"), P("data"),
+                ),
+                out_specs=(P(), P("data")),
                 check_rep=False,
             )
 
-        def cohort_round(params, x, y, mask, valid, key_data, weights):
-            stacked_params, losses = train_stacked(params, x, y, mask, valid, key_data)
+        def cohort_round(params, acc, x, y, mask, valid, key_data, weights):
+            wsum, losses = train_block(params, x, y, mask, valid, key_data, weights)
+            acc = jax.tree.map(jnp.add, acc, wsum)
             # Per-client mean loss over the LAST epoch's real steps (matching
             # the sequential LocalTrainer's reported loss).
             spe = losses.shape[1] // self.local_epochs
             last, last_valid = losses[:, -spe:], valid[:, -spe:]
             count = jnp.maximum(last_valid.sum(axis=1), 1)
             per_loss = jnp.where(last_valid, last, 0.0).sum(axis=1) / count
-            return weighted_sum_stacked(stacked_params, weights), per_loss
+            return acc, per_loss
 
-        self._round = jax.jit(cohort_round)
+        donate_argnums: tuple[int, ...] = ()
+        if self.donate:
+            donate_argnums = (1,)  # the accumulator aliases in place everywhere
+            if jax.default_backend() != "cpu":
+                # XLA:CPU warns on (and ignores) donations it cannot alias to
+                # an output; TPU/GPU reuse them for round temporaries.
+                donate_argnums += (2, 3, 4, 5, 6, 7)
+        self._round = jax.jit(cohort_round, donate_argnums=donate_argnums)
+
+    def _device_schedule(self, sched, key_data: np.ndarray) -> tuple[jax.Array, ...]:
+        """Move one chunk's schedule to device, sharded over the mesh if any."""
+        arrays = (sched.x, sched.y, sched.mask, sched.step_valid, key_data, sched.weights)
+        if self.mesh is None or "data" not in self.mesh.axis_names:
+            return tuple(jax.device_put(a) for a in arrays)
+        sharding = NamedSharding(self.mesh, P("data"))
+        return tuple(jax.device_put(a, sharding) for a in arrays)
+
+    @staticmethod
+    def _stack_key_data(client_keys) -> np.ndarray:
+        """(C, ...) uint32 key data from typed keys, a key array, or raw data."""
+        if isinstance(client_keys, jax.Array) and jnp.issubdtype(
+            client_keys.dtype, jax.dtypes.prng_key
+        ):
+            return np.asarray(jax.random.key_data(client_keys))
+        if isinstance(client_keys, (np.ndarray, jax.Array)):
+            return np.asarray(client_keys)
+        return np.stack([np.asarray(jax.random.key_data(k)) for k in client_keys])
 
     def train_cohort(
         self,
         params: PyTree,
         clients: Sequence[ClientDataset],
         rng: np.random.Generator,
-        client_keys: Sequence[jax.Array],
+        client_keys: Sequence[jax.Array] | np.ndarray | jax.Array,
         steps_per_epoch: int | None = None,
     ) -> tuple[PyTree, np.ndarray, int]:
         """One FedAvg round over ``clients``.
 
         ``client_keys`` holds one jax PRNG key per client, in the same order
-        the sequential engine would have split them.  Pass a federation-wide
+        the sequential engine would have split them — a list of typed keys,
+        a typed key array, or the stacked ``(C, ...)`` key data straight
+        from ``chain_split_keys``.  Pass a federation-wide
         ``steps_per_epoch`` to pin the schedule's step axis across rounds —
         otherwise it tracks this cohort's largest client and a different
         participant mix can retrigger compilation.  Returns the round's
         aggregated params, per-client mean local losses, and the number of
         *real* (unpadded) local steps executed.
         """
-        if len(clients) != len(client_keys):
+        all_key_data = self._stack_key_data(client_keys)
+        if len(clients) != len(all_key_data):
             raise ValueError("need exactly one PRNG key per client")
         sizes = [c.n_train for c in clients]
         spe = steps_per_epoch or cohort_steps_per_epoch(sizes, self.batch_size)
+        if self.cohort_chunk is not None and self.cohort_chunk <= 0:
+            raise ValueError(f"cohort_chunk must be positive, got {self.cohort_chunk}")
         chunk = self.cohort_chunk or len(clients)
-        if chunk <= 0:
-            raise ValueError(f"cohort_chunk must be positive, got {chunk}")
 
-        acc: PyTree | None = None
+        baseline = live_buffer_stats() if self.track_stats else {"count": 0, "bytes": 0}
+        peak = {"count": 0, "bytes": 0}
+
+        def sample() -> None:
+            if not self.track_stats:
+                return
+            now = live_buffer_stats()
+            peak["count"] = max(peak["count"], now["count"] - baseline["count"])
+            peak["bytes"] = max(peak["bytes"], now["bytes"] - baseline["bytes"])
+
+        acc = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.promote_types(p.dtype, jnp.float32)), params
+        )
         total_weight = 0.0
         per_losses = np.full(len(clients), np.nan, dtype=np.float32)
+        num_chunks = 0
+        args: tuple[jax.Array, ...] = ()
         for start in range(0, len(clients), chunk):
             part = clients[start : start + chunk]
             sched = build_cohort_schedule(
@@ -155,19 +271,41 @@ class CohortTrainer:
                 rng,
                 steps_per_epoch=spe,
             )
-            key_data = jnp.stack(
-                [jax.random.key_data(k) for k in client_keys[start : start + chunk]]
-            )
-            wsum, losses = self._round(
-                params, sched.x, sched.y, sched.mask, sched.step_valid, key_data, sched.weights
-            )
-            acc = wsum if acc is None else jax.tree.map(jnp.add, acc, wsum)
             total_weight += float(sched.weights.sum())
-            per_losses[start : start + len(part)] = np.asarray(losses)
+            # Pad the client axis with weight-0 dummy clients so it divides
+            # the mesh's data axis (their steps are all masked no-ops).
+            sched = pad_cohort_schedule(sched, self._num_shards)
+            key_data = np.zeros(
+                (sched.num_clients, *all_key_data.shape[1:]), dtype=all_key_data.dtype
+            )
+            key_data[: len(part)] = all_key_data[start : start + chunk]
+            staged = self._device_schedule(sched, key_data)
+            # Sampled before the previous chunk's buffers (still referenced by
+            # ``args`` on the non-donated path) are released: the plain path
+            # holds two chunks of schedule here, the donated path one.
+            sample()
+            args = staged
+            acc, losses = self._round(params, acc, *args)
+            if self.donate:
+                # Realize the donation of the schedule: the step consumed it,
+                # free the device copies now instead of at Python GC time.
+                for a in args:
+                    if not a.is_deleted():
+                        a.delete()
+            sample()
+            per_losses[start : start + len(part)] = np.asarray(losses)[: len(part)]
+            num_chunks += 1
 
         new_params = jax.tree.map(
             lambda t, ref: (t / total_weight).astype(ref.dtype), acc, params
         )
+        self.last_round_stats = {
+            "chunks": num_chunks,
+            "shards": self._num_shards,
+            "donated": self.donate,
+            "peak_live_buffers": peak["count"],
+            "peak_live_bytes": peak["bytes"],
+        }
         real_steps = sum(local_round_steps(n, self.batch_size, self.local_epochs) for n in sizes)
         return new_params, per_losses, real_steps
 

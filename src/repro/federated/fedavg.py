@@ -50,13 +50,22 @@ def aggregate_stacked(stacked: PyTree, weights) -> PyTree:
     return jax.tree.map(_avg, stacked)
 
 
-def weighted_sum_stacked(stacked: PyTree, weights) -> PyTree:
-    """Unnormalized ``sum_c w_c * leaf_c`` — the chunked-cohort accumulator."""
+def weighted_sum_stacked(stacked: PyTree, weights, axis_name: str | None = None) -> PyTree:
+    """Unnormalized ``sum_c w_c * leaf_c`` — the chunked-cohort accumulator.
+
+    Inside ``shard_map`` pass ``axis_name`` to fold the cross-shard reduction
+    into the same contraction: each shard sums its local clients, then one
+    ``psum`` of the params-sized tree completes the FedAvg numerator — the
+    only collective a sharded cohort round needs.
+    """
     w = jnp.asarray(weights, dtype=jnp.float32)
 
     def _sum(leaf):
         ct = jnp.promote_types(leaf.dtype, jnp.float32)
-        return jnp.tensordot(w.astype(ct), leaf.astype(ct), axes=((0,), (0,)))
+        out = jnp.tensordot(w.astype(ct), leaf.astype(ct), axes=((0,), (0,)))
+        if axis_name is not None:
+            out = jax.lax.psum(out, axis_name)
+        return out
 
     return jax.tree.map(_sum, stacked)
 

@@ -452,6 +452,24 @@ def model_flops_estimate(cfg, shape, kind: str) -> float:
     return 2.0 * n_active * tokens
 
 
+def live_buffer_stats() -> dict[str, int]:
+    """Count and bytes of every live (undeleted) jax array in the process.
+
+    The donated cohort round is validated against this: donation must make
+    the round's peak live footprint strictly smaller than the plain path
+    (``repro.federated.cohort.CohortTrainer.last_round_stats``), which is
+    what lets the 189-client paper federation fit the CI container.
+    """
+    import jax
+
+    count = 0
+    total = 0
+    for a in jax.live_arrays():
+        count += 1
+        total += int(a.size) * a.dtype.itemsize
+    return {"count": count, "bytes": total}
+
+
 def memory_summary(compiled) -> dict[str, float]:
     ma = compiled.memory_analysis()
     out = {}

@@ -28,6 +28,16 @@ def make_host_mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
+def make_data_mesh(num_devices: int | None = None):
+    """1-D ``("data",)`` mesh over the local devices — the federated client
+    axis.  On CPU, force multiple devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (CI's multi-device matrix leg does exactly this)."""
+    import jax
+
+    return make_mesh((num_devices or jax.device_count(),), ("data",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes that carry the batch: ('pod','data') on multi-pod, ('data',) else."""
     names = mesh.axis_names

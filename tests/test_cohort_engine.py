@@ -215,6 +215,16 @@ def test_cohort_trainer_key_count_mismatch(model):
         trainer.train_cohort(params0, clients, rng, [])
 
 
+def test_cohort_chunk_zero_rejected(model):
+    """chunk=0 must raise, not silently disable chunking (falsy-0 trap)."""
+    _, loss_fn, params0 = model
+    rng = np.random.default_rng(6)
+    trainer = CohortTrainer(loss_fn, AdamW(), batch_size=16, local_epochs=1, cohort_chunk=0)
+    clients = [make_client(0, 8, rng)]
+    with pytest.raises(ValueError, match="cohort_chunk"):
+        trainer.train_cohort(params0, clients, rng, [jax.random.key(0)])
+
+
 def test_single_compilation_across_rounds(model):
     """The server pins steps_per_epoch to the federation-wide max, so rounds
     with different (randomly sampled) participant mixes reuse one compiled

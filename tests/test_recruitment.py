@@ -104,6 +104,30 @@ def test_recruited_are_lowest_nu():
     assert recruited_nu.max() <= excluded_nu.min() + 1e-12
 
 
+# Shared strategies for the recruitment property tests.  A population is a
+# list of (histogram, sample-size) pairs — sizes drawn independently of the
+# histogram mass so the n^-1/2 term is exercised on its own.  Everything
+# here works under both real hypothesis and tests/_hypothesis_fallback.
+HISTOGRAMS = st.lists(st.integers(0, 50), min_size=NUM_BINS, max_size=NUM_BINS).filter(
+    lambda c: sum(c) > 0
+)
+POPULATIONS = st.lists(
+    st.tuples(HISTOGRAMS, st.integers(1, 5000)), min_size=2, max_size=20
+)
+GAMMA_PAIRS = st.tuples(
+    st.floats(0.01, 2.0, allow_nan=False),
+    st.floats(0.0, 2.0, allow_nan=False),
+)
+
+
+def make_stats_sized(population):
+    """ClientStats with independently drawn histogram and sample size."""
+    return [
+        ClientStats(client_id=i, counts=np.asarray(c, dtype=np.int64), n=int(n))
+        for i, (c, n) in enumerate(population)
+    ]
+
+
 @settings(max_examples=30, deadline=None)
 @given(
     data=st.lists(
@@ -146,6 +170,70 @@ def test_property_order_invariance(perm_seed):
     perm = np.random.default_rng(perm_seed).permutation(len(stats))
     res_b = recruit([stats[i] for i in perm], BALANCED)
     assert sorted(res_a.recruited_ids.tolist()) == sorted(res_b.recruited_ids.tolist())
+
+
+@settings(max_examples=25, deadline=None)
+@given(population=POPULATIONS, gammas=GAMMA_PAIRS)
+def test_property_greedy_threshold_crossing(population, gammas):
+    """Eq. 5, exactly: recruitment is the shortest ascending-nu prefix whose
+    cumulative representativeness reaches iota — plus the crossing client."""
+    stats = make_stats_sized(population)
+    gdv, gsa = gammas
+    cfg = RecruitmentConfig(gamma_dv=gdv, gamma_sa=gsa, gamma_th=0.35)
+    res = recruit(stats, cfg)
+    order = np.argsort(res.nu, kind="stable")
+    k = res.num_recruited
+    # the recruited ids ARE the ascending-nu greedy prefix, in nu order
+    np.testing.assert_array_equal(res.recruited_ids, res.client_ids[order][:k])
+    cumulative = np.cumsum(res.nu[order])
+    assert res.iota == pytest.approx(cfg.gamma_th * res.nu_g)
+    if k < len(stats):
+        # sum through the recruited prefix crossed the threshold ...
+        assert cumulative[k - 1] >= res.iota - 1e-9
+    if k >= 2:
+        # ... and no shorter prefix did (the one before the crosser is below)
+        assert cumulative[k - 2] < res.iota + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(population=POPULATIONS, gammas=GAMMA_PAIRS)
+def test_property_iota_monotone_and_nested(population, gammas):
+    """gamma_th up => iota up and the recruited set only ever grows (the
+    greedy order is fixed by nu, so recruitment sets are nested prefixes),
+    reaching the full population at gamma_th = 1.0."""
+    stats = make_stats_sized(population)
+    gdv, gsa = gammas
+    prev_iota, prev_ids = -np.inf, set()
+    for gth in (0.05, 0.2, 0.5, 0.8, 1.0):
+        res = recruit(stats, RecruitmentConfig(gamma_dv=gdv, gamma_sa=gsa, gamma_th=gth))
+        assert res.iota >= prev_iota - 1e-12
+        ids = set(res.recruited_ids.tolist())
+        assert prev_ids <= ids
+        prev_iota, prev_ids = res.iota, ids
+    assert len(prev_ids) == len(stats)  # gamma_th = 1.0 recruits everyone
+
+
+@settings(max_examples=20, deadline=None)
+@given(population=POPULATIONS, perm_seed=st.integers(0, 2**31 - 1))
+def test_property_permutation_invariance_random_populations(population, perm_seed):
+    """For arbitrary drawn populations, recruitment does not depend on the
+    order clients are presented in: nu values travel with their client and
+    the recruited nu multiset is unchanged.  (Ties in nu may legitimately
+    swap *which* tied client crosses the threshold, so id-set equality is
+    only asserted when all nu are distinct.)"""
+    stats = make_stats_sized(population)
+    perm = np.random.default_rng(perm_seed).permutation(len(stats))
+    res_a = recruit(stats, BALANCED)
+    res_b = recruit([stats[int(i)] for i in perm], BALANCED)
+    np.testing.assert_allclose(res_a.nu[perm], res_b.nu, rtol=0, atol=0)
+    assert res_a.num_recruited == res_b.num_recruited
+    assert res_a.nu_g == pytest.approx(res_b.nu_g)
+    nu_by_id = {int(i): float(v) for i, v in zip(res_a.client_ids, res_a.nu)}
+    recruited_nu_a = sorted(nu_by_id[int(i)] for i in res_a.recruited_ids)
+    recruited_nu_b = sorted(nu_by_id[int(i)] for i in res_b.recruited_ids)
+    np.testing.assert_allclose(recruited_nu_a, recruited_nu_b, rtol=0, atol=0)
+    if len(set(res_a.nu.tolist())) == len(stats):
+        assert sorted(res_a.recruited_ids.tolist()) == sorted(res_b.recruited_ids.tolist())
 
 
 def test_recruitment_curve_matches_paper_shape():
