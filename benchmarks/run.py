@@ -222,6 +222,66 @@ def bench_paper189(
 
 
 # --------------------------------------------------------------------------
+# staging pipeline: rebuild-per-round vs device-resident + prefetch
+# --------------------------------------------------------------------------
+
+def bench_pipeline(
+    rounds: int = 4,
+    total_stays: int = 189 * 64,
+    cohort_chunk: int = 48,
+    mesh_auto: bool = False,
+    out_path: str = "BENCH_pipeline.json",
+) -> None:
+    """Per-round staging cost at 189 clients: PR 2's rebuild-per-round path
+    (full schedule re-materialized in numpy and re-uploaded every round)
+    against the device-resident path (data uploaded once, rounds stage only
+    int32 index plans, batches gathered on device, plans double-buffered on
+    a background thread).  Reports per-variant steady-state round seconds,
+    per-round host->device bytes, and the rebuild/resident speedup and byte
+    ratio; with more than one visible device (or ``--mesh-auto``) the same
+    grid additionally runs through the shard_map client-axis path.  Writes
+    ``BENCH_pipeline.json``.
+    """
+    import jax
+
+    from repro.experiments.paper import run_staging_comparison
+
+    report = {
+        "bench": "staging_pipeline",
+        "single_device": run_staging_comparison(
+            rounds=rounds, total_stays=total_stays, cohort_chunk=cohort_chunk
+        ),
+    }
+    if mesh_auto and jax.device_count() > 1:
+        # Mesh leg runs unchunked (see run_staging_comparison), where the
+        # chunked / no-prefetch variants would duplicate the base ones.
+        report["shard_map"] = run_staging_comparison(
+            rounds=rounds, total_stays=total_stays, cohort_chunk=cohort_chunk,
+            mesh="auto", variants=("rebuild", "resident"),
+        )
+    elif mesh_auto:
+        emit("pipeline_shard_map_skipped", 0.0, "only one device visible")
+    for leg, rep in report.items():
+        if not isinstance(rep, dict) or "variants" not in rep:
+            continue
+        for variant, entry in rep["variants"].items():
+            emit(
+                f"pipeline_{leg}_{variant}",
+                1e6 * entry["round_time_s"],
+                f"staged={entry['bytes_staged_per_round']}B"
+                f";prefetched={entry['plans_prefetched']}",
+            )
+        emit(
+            f"pipeline_{leg}_speedup",
+            1e6 * rep["variants"]["resident"]["round_time_s"],
+            f"speedup={rep['speedup']:.2f}x;bytes_ratio={rep['bytes_ratio']:.1f}x"
+            f";max_param_diff={rep['max_param_diff']:.2e}",
+        )
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}", flush=True)
+
+
+# --------------------------------------------------------------------------
 # kernels
 # --------------------------------------------------------------------------
 
@@ -296,17 +356,25 @@ def main() -> None:
     ap.add_argument("--skip-paper", action="store_true")
     ap.add_argument(
         "--mode",
-        choices=["all", "cohort", "kernels", "paper", "paper189"],
+        choices=["all", "cohort", "kernels", "paper", "paper189", "pipeline"],
         default="all",
         help="'cohort' times sequential vs vectorized federated rounds only; "
-        "'paper189' runs the full five-setting grid at 189 clients",
+        "'paper189' runs the full five-setting grid at 189 clients; "
+        "'pipeline' compares rebuild-per-round vs device-resident staging",
     )
     ap.add_argument("--cohort-clients", type=int, nargs="+", default=[8, 32, 128])
     ap.add_argument("--paper189-rounds", type=int, default=3)
     ap.add_argument("--paper189-stays", type=int, default=189 * 23)
+    ap.add_argument("--pipeline-rounds", type=int, default=4)
+    ap.add_argument("--pipeline-stays", type=int, default=189 * 64)
+    ap.add_argument(
+        "--pipeline-chunk", type=int, default=48,
+        help="pipeline: clients per vmapped call (4 chunks at 189 clients, "
+        "so the double-buffered plan prefetch has chunks to overlap)",
+    )
     ap.add_argument(
         "--mesh-auto", action="store_true",
-        help="paper189: shard the client axis over all visible devices",
+        help="paper189/pipeline: shard the client axis over all visible devices",
     )
     args = ap.parse_args()
 
@@ -316,6 +384,15 @@ def main() -> None:
         bench_paper189(
             rounds=args.paper189_rounds,
             total_stays=args.paper189_stays,
+            mesh_auto=args.mesh_auto,
+        )
+        print(f"# total benchmark time: {time.time()-t0:.1f}s")
+        return
+    if args.mode == "pipeline":
+        bench_pipeline(
+            rounds=args.pipeline_rounds,
+            total_stays=args.pipeline_stays,
+            cohort_chunk=args.pipeline_chunk,
             mesh_auto=args.mesh_auto,
         )
         print(f"# total benchmark time: {time.time()-t0:.1f}s")

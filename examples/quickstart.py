@@ -32,6 +32,8 @@ def main() -> None:
     # 3. federated training on the recruited subset (Federated-SRC setting).
     #    The vectorized engine trains every round participant inside ONE
     #    jitted vmap; engine="sequential" is the per-client reference loop.
+    #    Client data is uploaded to device once (staging="resident") — each
+    #    round stages only an int32 index plan and gathers batches on device.
     model_cfg = GRUConfig()
     fed_cfg = FederatedConfig(
         rounds=5, local_epochs=2, participation_fraction=0.1,

@@ -1,3 +1,10 @@
+from repro.data.device_cohort import (
+    CohortPlan,
+    DeviceCohort,
+    build_cohort_plan,
+    build_device_cohort,
+    pad_cohort_plan,
+)
 from repro.data.pipeline import (
     ArrayDataset,
     ClientDataset,
@@ -10,7 +17,12 @@ from repro.data.synth_eicu import Cohort, CohortConfig, generate_cohort
 __all__ = [
     "ArrayDataset",
     "ClientDataset",
+    "CohortPlan",
+    "DeviceCohort",
     "build_client_datasets",
+    "build_cohort_plan",
+    "build_device_cohort",
+    "pad_cohort_plan",
     "global_dataset",
     "lm_token_batch",
     "Cohort",

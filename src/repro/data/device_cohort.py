@@ -1,0 +1,251 @@
+"""Device-resident client data + per-round index plans.
+
+The vectorized engine's remaining per-round cost (after PR 2 moved the
+round computation into one jitted vmap) is host-side: every round
+re-materializes the full ``(clients, steps, batch, *features)`` schedule in
+numpy and re-uploads O(dataset) bytes host->device, fully serialized with
+the round computation.  This module removes that traffic for the lifetime
+of a federation:
+
+* ``build_device_cohort`` pads every client's train split to a common
+  sample axis and uploads the stacked ``(rows, max_n + 1, *features)``
+  arrays **once** (sharded over the mesh's ``"data"`` axis when one is
+  given).  Row ``max_n`` of every client is all-zero padding.
+* ``build_cohort_plan`` replaces ``build_cohort_schedule`` on the hot
+  path: it draws the *same* permutations from the *same* numpy RNG stream
+  in the same client-major order, but records only ``(C, T, B)`` int32
+  sample indices (plus step validity and weights).  The actual batch
+  gather happens on device, inside the jitted round.
+
+Parity is bitwise by construction: a real slot's index points at the same
+shuffled sample the schedule would have copied; every padding slot points
+at the all-zero pad row, so the gathered batch equals the schedule's
+zero-padded batch exactly, and the example mask is recoverable on device
+as ``sample_idx < n_c``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.data.pipeline import ClientDataset, cohort_steps_per_epoch
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortPlan:
+    """A fixed-shape *index* plan for one federated round across a cohort.
+
+    The schedule-shaped twin of ``CohortSchedule``: same ``(C, T)`` step
+    grid, same RNG stream, but O(C*T*B) int32 indices instead of O(C*T*B*F)
+    feature floats.  ``sample_idx`` entries index a client's *local* sample
+    axis in the device-resident cohort; every padding slot (batch tail and
+    dummy steps alike) holds ``pad_index``, which every client maps to an
+    all-zero row.  ``client_rows`` maps each cohort position to its row in
+    the ``DeviceCohort`` the plan will be gathered from.
+    """
+
+    sample_idx: np.ndarray  # (C, T, B) int32 into the client's sample axis
+    step_valid: np.ndarray  # (C, T) bool — False on dummy padding steps
+    client_rows: np.ndarray  # (C,) int32 rows into the DeviceCohort
+    weights: np.ndarray     # (C,) float32 local sample counts n_c
+    pad_index: int          # the all-zero row every padding slot points at
+    steps_per_epoch: int
+    local_epochs: int
+
+    @property
+    def num_clients(self) -> int:
+        return self.sample_idx.shape[0]
+
+    @property
+    def total_steps(self) -> int:
+        return self.sample_idx.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes this plan stages to device per round."""
+        return (
+            self.sample_idx.nbytes
+            + self.step_valid.nbytes
+            + self.client_rows.nbytes
+            + self.weights.nbytes
+        )
+
+
+@dataclasses.dataclass
+class DeviceCohort:
+    """A federation's train arrays, resident on device for its lifetime.
+
+    ``x``/``y`` are uploaded once by ``build_device_cohort``; afterwards a
+    round stages only a ``CohortPlan`` and the jitted round gathers its
+    batches on device.  Sample row ``pad_index`` (== ``x.shape[1] - 1``) is
+    all-zero for every client, as are any dummy client rows added to make
+    the row axis divide a mesh's data axis.
+    """
+
+    x: Any                   # jax.Array (rows, max_n + 1, *features)
+    y: Any                   # jax.Array (rows, max_n + 1)
+    rows: dict[int, int]     # client_id -> row
+    nbytes: int              # one-time host->device upload size
+    _sources: dict[int, Any] = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def pad_index(self) -> int:
+        return self.x.shape[1] - 1
+
+    @property
+    def num_rows(self) -> int:
+        return self.x.shape[0]
+
+    def row_of(self, client: ClientDataset) -> int:
+        try:
+            return self.rows[client.client_id]
+        except KeyError:
+            raise KeyError(
+                f"client {client.client_id} is not part of this device cohort; "
+                "attach the full federation before training"
+            ) from None
+
+    def owns(self, client: ClientDataset) -> bool:
+        """True iff this resident copy was built from exactly this dataset."""
+        return self._sources.get(client.client_id) is client.train
+
+
+def build_device_cohort(
+    clients: Sequence[ClientDataset], mesh: Any = None
+) -> DeviceCohort:
+    """Pad and upload every client's train arrays once.
+
+    The sample axis is padded to ``max_n + 1`` so index ``max_n`` is an
+    all-zero row shared by every client — the target of every padding slot
+    in a ``CohortPlan``.  With a ``mesh`` carrying a ``"data"`` axis the
+    row axis is padded to the axis size with all-zero dummy rows and the
+    arrays are sharded over it (one ``device_put`` for the whole pytree).
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if not clients:
+        raise ValueError("empty cohort")
+    feat = clients[0].train.x.shape[1:]
+    x_dtype = clients[0].train.x.dtype
+    y_dtype = clients[0].train.y.dtype
+    max_n = max(c.n_train for c in clients)
+    shards = 1
+    if mesh is not None and "data" in getattr(mesh, "axis_names", ()):
+        shards = int(mesh.shape["data"])
+    num_rows = len(clients) + (-len(clients) % shards)
+
+    hx = np.zeros((num_rows, max_n + 1, *feat), dtype=x_dtype)
+    hy = np.zeros((num_rows, max_n + 1), dtype=y_dtype)
+    rows: dict[int, int] = {}
+    sources: dict[int, Any] = {}
+    for r, client in enumerate(clients):
+        if client.train.x.shape[1:] != feat:
+            raise ValueError("all cohort clients must share a feature shape")
+        n = client.n_train
+        hx[r, :n] = client.train.x
+        hy[r, :n] = client.train.y
+        rows[client.client_id] = r
+        sources[client.client_id] = client.train
+
+    if shards > 1:
+        sharding = NamedSharding(mesh, P("data"))
+        dx, dy = jax.device_put((hx, hy), sharding)
+    else:
+        dx, dy = jax.device_put((hx, hy))
+    return DeviceCohort(
+        x=dx, y=dy, rows=rows, nbytes=hx.nbytes + hy.nbytes, _sources=sources,
+    )
+
+
+def build_cohort_plan(
+    sizes: Sequence[int],
+    batch_size: int,
+    local_epochs: int,
+    rng: np.random.Generator,
+    steps_per_epoch: int | None = None,
+    client_rows: Sequence[int] | None = None,
+    pad_index: int | None = None,
+) -> CohortPlan:
+    """The index-plan twin of ``build_cohort_schedule``.
+
+    Consumes ``rng`` in exactly the schedule builder's order (client-major,
+    one ``rng.permutation(n_c)`` per epoch), so the two paths are fed
+    bit-identical shuffles and can be swapped round for round.  Slots the
+    schedule would zero-pad (batch tails, dummy steps) point at
+    ``pad_index`` — the device cohort's shared all-zero row.
+    """
+    sizes = [int(n) for n in sizes]
+    if not sizes:
+        raise ValueError("empty cohort")
+    spe = steps_per_epoch or cohort_steps_per_epoch(sizes, batch_size)
+    total = spe * local_epochs
+    n_clients = len(sizes)
+    if pad_index is None:
+        pad_index = max(sizes)
+    if pad_index < max(sizes):
+        raise ValueError(
+            f"pad_index={pad_index} must be >= the largest client size {max(sizes)}"
+        )
+
+    sample_idx = np.full((n_clients, total, batch_size), pad_index, dtype=np.int32)
+    step_valid = np.zeros((n_clients, total), dtype=bool)
+    for c, n in enumerate(sizes):
+        steps = -(-n // batch_size)
+        if steps > spe:
+            raise ValueError(f"client {c} needs more than steps_per_epoch={spe} batches")
+        for epoch in range(local_epochs):
+            perm = rng.permutation(n)
+            t = epoch * spe
+            for s in range(steps):
+                sel = perm[s * batch_size : (s + 1) * batch_size]
+                sample_idx[c, t + s, : len(sel)] = sel
+                step_valid[c, t + s] = True
+
+    if client_rows is None:
+        client_rows = range(n_clients)
+    return CohortPlan(
+        sample_idx=sample_idx,
+        step_valid=step_valid,
+        client_rows=np.asarray(list(client_rows), dtype=np.int32),
+        weights=np.asarray(sizes, dtype=np.float32),
+        pad_index=pad_index,
+        steps_per_epoch=spe,
+        local_epochs=local_epochs,
+    )
+
+
+def pad_cohort_plan(plan: CohortPlan, multiple: int) -> CohortPlan:
+    """Pad the client axis with weight-0 dummy clients to a multiple.
+
+    The plan twin of ``pad_cohort_schedule``: dummy clients point every
+    slot at the pad row (so they gather all-zero batches with an all-zero
+    mask), have no valid steps, zero weight, and borrow row 0 — every one
+    of their steps is a masked no-op, so they change only the array shape.
+    """
+    if multiple <= 1:
+        return plan
+    pad = -plan.num_clients % multiple
+    if pad == 0:
+        return plan
+    return CohortPlan(
+        sample_idx=np.concatenate(
+            [
+                plan.sample_idx,
+                np.full((pad, *plan.sample_idx.shape[1:]), plan.pad_index, np.int32),
+            ]
+        ),
+        step_valid=np.concatenate(
+            [plan.step_valid, np.zeros((pad, plan.total_steps), dtype=bool)]
+        ),
+        client_rows=np.concatenate([plan.client_rows, np.zeros(pad, np.int32)]),
+        weights=np.concatenate([plan.weights, np.zeros(pad, np.float32)]),
+        pad_index=plan.pad_index,
+        steps_per_epoch=plan.steps_per_epoch,
+        local_epochs=plan.local_epochs,
+    )

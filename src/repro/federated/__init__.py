@@ -1,6 +1,7 @@
 from repro.federated.central import CentralConfig, CentralRunResult, train_central
 from repro.federated.client import LocalTrainer
-from repro.federated.cohort import CohortTrainer
+from repro.federated.cohort import STAGING_MODES, CohortTrainer, chain_split_keys
+from repro.federated.staging import StagingPipeline
 from repro.federated.fedavg import (
     aggregate,
     aggregate_stacked,
@@ -25,6 +26,9 @@ __all__ = [
     "train_central",
     "LocalTrainer",
     "CohortTrainer",
+    "STAGING_MODES",
+    "StagingPipeline",
+    "chain_split_keys",
     "aggregate",
     "aggregate_stacked",
     "weighted_sum_stacked",

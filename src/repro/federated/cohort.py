@@ -5,13 +5,11 @@ one jitted step per client per batch from Python, so a round's wall clock
 scales linearly with federation size.  Here the global parameters are
 broadcast across a leading client axis and a whole FedAvg round — every
 participant's ``local_epochs`` of AdamW steps — runs inside a single
-``jax.lax.scan`` over a ``jax.vmap``-ed per-client step, on a fixed-shape
-``(clients, steps, batch, ...)`` schedule from
-``repro.data.pipeline.build_cohort_schedule``.
+``jax.lax.scan`` over a ``jax.vmap``-ed per-client step.
 
 Parity with the sequential oracle is exact by construction:
 
-* the schedule consumes the shared numpy RNG in the same client-major order
+* batch data consumes the shared numpy RNG in the same client-major order
   the sequential loop does, so each client sees identical shuffled batches;
 * each client's jax PRNG chain is advanced only on its *real* steps (dummy
   padding steps are masked to exact no-ops on params, optimizer state, and
@@ -20,17 +18,36 @@ Parity with the sequential oracle is exact by construction:
   weighted sums accumulated into a running pytree, normalized once at the
   end of the round.
 
+Staging (``staging=``) controls how a round's batches reach the device:
+
+* ``"rebuild"`` — PR 2's path: every round re-materializes the full
+  ``(clients, steps, batch, *features)`` schedule in numpy
+  (``repro.data.pipeline.build_cohort_schedule``) and uploads O(dataset)
+  bytes host->device.
+* ``"resident"`` — client train arrays are uploaded **once** per
+  federation (``repro.data.device_cohort``, sharded over the mesh when one
+  is given) and a round stages only a compact ``(C, T, B)`` int32 index
+  plan drawn from the *same* RNG stream; the jitted round gathers each
+  step's batch from the resident arrays on device (``jnp.take`` along the
+  per-client sample axis), and the per-example mask is derived on device
+  as ``sample_idx < n_c``.  Per-round host->device traffic drops from
+  O(C*T*B*features) floats to O(C*T*B) int32s.  With ``prefetch`` (the
+  default) a ``StagingPipeline`` builds and uploads chunk k+1's plan on a
+  background thread while chunk k's donated step runs, and all host syncs
+  (per-chunk loss fetches) are deferred to the end of the round so XLA
+  dispatch stays ahead of the device.
+
 Memory (the 189-client paper federation): the round step is jitted with
 ``donate_argnums`` so the cross-chunk accumulator is updated *in place*
 (XLA aliases the donated input to the output — no second params-sized
-buffer per chunk), and the chunk's device-resident schedule buffers are
-released the moment the step that consumed them returns.  On TPU/GPU the
-schedule buffers are additionally marked donated so XLA can reuse their
-memory for round temporaries; XLA:CPU cannot consume a donation with no
-aliasable output, so there the eager release is the mechanism.  Peak
+buffer per chunk), and the chunk's staged device buffers are released the
+moment the step that consumed them returns.  On TPU/GPU the staged buffers
+are additionally marked donated so XLA can reuse their memory for round
+temporaries; XLA:CPU cannot consume a donation with no aliasable output,
+so there the eager release is the mechanism.  The resident cohort arrays
+themselves are never donated — they live for the federation.  Peak
 live-buffer footprint is tracked per round in ``last_round_stats`` (see
-``repro.launch.hlo_analysis.live_buffer_stats``) — the donated path holds
-one chunk of schedule in device memory where the plain path holds two.
+``repro.launch.hlo_analysis.live_buffer_stats``).
 
 Multi-device: pass ``mesh`` (or the string ``"auto"`` to build a 1-D
 ``("data",)`` mesh over every local device) to shard the client axis with
@@ -52,6 +69,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.data.device_cohort import (
+    DeviceCohort,
+    build_cohort_plan,
+    build_device_cohort,
+    pad_cohort_plan,
+)
 from repro.data.pipeline import (
     ClientDataset,
     build_cohort_schedule,
@@ -60,11 +83,14 @@ from repro.data.pipeline import (
     pad_cohort_schedule,
 )
 from repro.federated.fedavg import weighted_sum_stacked
+from repro.federated.staging import StagingPipeline
 from repro.launch.hlo_analysis import live_buffer_stats
 from repro.optim.adamw import AdamW, apply_updates
 
 PyTree = Any
 LossFn = Callable[..., Any]  # loss(params, batch, rng) -> scalar
+
+STAGING_MODES = ("rebuild", "resident")
 
 
 @functools.partial(jax.jit, static_argnums=1)
@@ -76,7 +102,7 @@ def _chain_split(key_data, n: int):
     return jax.lax.scan(step, key_data, None, length=n)
 
 
-def chain_split_keys(key: jax.Array, n: int) -> tuple[jax.Array, np.ndarray]:
+def chain_split_keys(key: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
     """``n`` sequential ``jax.random.split`` calls in one jitted scan.
 
     Bit-identical to the Python loop ``key, sub = jax.random.split(key)``
@@ -84,9 +110,12 @@ def chain_split_keys(key: jax.Array, n: int) -> tuple[jax.Array, np.ndarray]:
     one dispatch instead of ``n`` — at 189 clients the chained host loop
     costs ~0.2s per round, a measurable slice of a vectorized round.
     Returns the advanced key and the ``(n, ...)`` stacked sub-key data.
+    The stacked data stays on device — the vectorized engine consumes it
+    there, so round-tripping it through numpy would cost a device sync and
+    a re-upload per round.
     """
     kd, subs = _chain_split(jax.random.key_data(key), n)
-    return jax.random.wrap_key_data(kd), np.asarray(subs)
+    return jax.random.wrap_key_data(kd), subs
 
 
 @dataclasses.dataclass
@@ -104,18 +133,32 @@ class CohortTrainer:
     # one device is visible — the degenerate mesh buys nothing).
     mesh: Any = None
     # Donate round buffers to the jitted step: the cross-chunk accumulator
-    # is aliased in place and each chunk's schedule is released as soon as
-    # the step consuming it returns.  Turn off only to diff memory behavior.
+    # is aliased in place and each chunk's staged buffers are released as
+    # soon as the step consuming them returns.  Turn off only to diff
+    # memory behavior.
     donate: bool = True
+    # "rebuild" re-materializes and re-uploads the full batch schedule each
+    # round (PR 2's path, kept as the staging reference); "resident" keeps
+    # client data on device for the federation's lifetime and stages only
+    # int32 index plans.  FederatedServer defaults to "resident".
+    staging: str = "rebuild"
+    # Resident staging: build/upload chunk k+1's plan on a background
+    # thread while chunk k trains (double buffering).  Only engages when a
+    # round has more than one chunk; numerically a no-op either way.
+    prefetch: bool = True
     # Sample live-buffer peaks into last_round_stats (two process-wide
     # jax.live_arrays() walks per chunk).  Cheap, but disable on
     # latency-critical loops that never read the stats.
     track_stats: bool = True
-    # Peak live-buffer footprint of the most recent train_cohort call
-    # (deltas vs the call's entry), populated after every round.
+    # Peak live-buffer footprint + staging accounting of the most recent
+    # train_cohort call, populated after every round.
     last_round_stats: dict[str, Any] | None = dataclasses.field(default=None, init=False)
 
     def __post_init__(self) -> None:
+        if self.staging not in STAGING_MODES:
+            raise ValueError(
+                f"unknown staging {self.staging!r}; choose from {STAGING_MODES}"
+            )
         if isinstance(self.mesh, str):
             if self.mesh != "auto":
                 raise ValueError(f"mesh must be a Mesh, None, or 'auto'; got {self.mesh!r}")
@@ -123,7 +166,9 @@ class CohortTrainer:
 
             self.mesh = make_data_mesh() if jax.device_count() > 1 else None
         mesh = self.mesh if self.mesh is not None and "data" in self.mesh.axis_names else None
+        self._data_mesh = mesh
         self._num_shards = int(mesh.shape["data"]) if mesh is not None else 1
+        self._device_cohort: DeviceCohort | None = None
 
         def client_step(params, opt_state, key_data, batch, valid):
             """One masked local step; dummy steps are exact no-ops."""
@@ -152,6 +197,32 @@ class CohortTrainer:
             )
             return params, losses
 
+        def train_one_resident(params, x_c, y_c, idx_c, v_c, key_data, n_c):
+            """All local epochs for one client, gathering batches on device.
+
+            ``x_c``/``y_c`` are the client's resident ``(max_n + 1, ...)``
+            arrays; each scan step gathers its ``(B, ...)`` batch by index
+            and derives the example mask as ``idx < n_c`` (padding slots
+            point at the all-zero pad row, so the gathered batch is
+            bit-identical to the rebuilt schedule's)."""
+            opt_state = self.optimizer.init(params)
+
+            def step(carry, inp):
+                p, s, kd = carry
+                ib, valid = inp
+                batch = (
+                    jnp.take(x_c, ib, axis=0),
+                    jnp.take(y_c, ib, axis=0),
+                    (ib < n_c).astype(jnp.float32),
+                )
+                p, s, kd, loss = client_step(p, s, kd, batch, valid)
+                return (p, s, kd), loss
+
+            (params, _, _), losses = jax.lax.scan(
+                step, (params, opt_state, key_data), (idx_c, v_c)
+            )
+            return params, losses
+
         def train_block(params, x, y, mask, valid, key_data, weights, axis_name=None):
             """Train a block of clients and reduce to one weighted param sum.
 
@@ -164,11 +235,21 @@ class CohortTrainer:
             )(x, y, mask, valid, key_data)
             return weighted_sum_stacked(stacked, weights, axis_name=axis_name), losses
 
+        def train_block_resident(
+            params, x, y, idx, valid, key_data, weights, axis_name=None
+        ):
+            stacked, losses = jax.vmap(
+                lambda xc, yc, ic, vc, kd, nc: train_one_resident(
+                    params, xc, yc, ic, vc, kd, nc
+                )
+            )(x, y, idx, valid, key_data, weights)
+            return weighted_sum_stacked(stacked, weights, axis_name=axis_name), losses
+
         if mesh is not None:
             from jax.experimental.shard_map import shard_map
 
-            train_block = shard_map(
-                functools.partial(train_block, axis_name="data"),
+            sharded = functools.partial(
+                shard_map,
                 mesh=mesh,
                 in_specs=(
                     P(), P("data"), P("data"), P("data"), P("data"), P("data"), P("data"),
@@ -176,45 +257,146 @@ class CohortTrainer:
                 out_specs=(P(), P("data")),
                 check_rep=False,
             )
+            train_block = sharded(functools.partial(train_block, axis_name="data"))
+            train_block_resident = sharded(
+                functools.partial(train_block_resident, axis_name="data")
+            )
 
-        def cohort_round(params, acc, x, y, mask, valid, key_data, weights):
-            wsum, losses = train_block(params, x, y, mask, valid, key_data, weights)
-            acc = jax.tree.map(jnp.add, acc, wsum)
+        def per_client_losses(losses, valid):
             # Per-client mean loss over the LAST epoch's real steps (matching
             # the sequential LocalTrainer's reported loss).
             spe = losses.shape[1] // self.local_epochs
             last, last_valid = losses[:, -spe:], valid[:, -spe:]
             count = jnp.maximum(last_valid.sum(axis=1), 1)
-            per_loss = jnp.where(last_valid, last, 0.0).sum(axis=1) / count
-            return acc, per_loss
+            return jnp.where(last_valid, last, 0.0).sum(axis=1) / count
 
+        def cohort_round(params, acc, x, y, mask, valid, key_data, weights):
+            wsum, losses = train_block(params, x, y, mask, valid, key_data, weights)
+            acc = jax.tree.map(jnp.add, acc, wsum)
+            return acc, per_client_losses(losses, valid)
+
+        def resident_block(params, acc, x_sel, y_sel, idx, valid, key_data, weights):
+            wsum, losses = train_block_resident(
+                params, x_sel, y_sel, idx, valid, key_data, weights
+            )
+            acc = jax.tree.map(jnp.add, acc, wsum)
+            return acc, per_client_losses(losses, valid)
+
+        def cohort_round_resident(
+            params, acc, x_all, y_all, rows, idx, valid, key_data, weights
+        ):
+            # Select the chunk's client rows from the resident arrays on
+            # device (under a mesh this is a GSPMD gather from the sharded
+            # federation arrays, re-laid-out onto the cohort's data axis).
+            x_sel = jnp.take(x_all, rows, axis=0)
+            y_sel = jnp.take(y_all, rows, axis=0)
+            if mesh is not None:
+                sharding = NamedSharding(mesh, P("data"))
+                x_sel = jax.lax.with_sharding_constraint(x_sel, sharding)
+                y_sel = jax.lax.with_sharding_constraint(y_sel, sharding)
+            return resident_block(params, acc, x_sel, y_sel, idx, valid, key_data, weights)
+
+        def cohort_round_resident_full(params, acc, x_all, y_all, idx, valid, key_data, weights):
+            # Full-cohort fast path: the chunk IS the resident federation in
+            # row order (every all-participants round), so the row gather —
+            # a round-sized device copy — is skipped and the resident
+            # arrays feed the vmap directly.
+            return resident_block(params, acc, x_all, y_all, idx, valid, key_data, weights)
+
+        # Donation layout: the accumulator (argnum 1) aliases in place
+        # everywhere; on TPU/GPU the per-round staged buffers are donated
+        # too so XLA reuses their memory for round temporaries (XLA:CPU
+        # warns on and ignores donations it cannot alias to an output).
+        # The resident cohort arrays (argnums 2-3 of the resident round)
+        # are never donated — they outlive every round.
         donate_argnums: tuple[int, ...] = ()
+        donate_staged = self.donate and jax.default_backend() != "cpu"
         if self.donate:
-            donate_argnums = (1,)  # the accumulator aliases in place everywhere
-            if jax.default_backend() != "cpu":
-                # XLA:CPU warns on (and ignores) donations it cannot alias to
-                # an output; TPU/GPU reuse them for round temporaries.
-                donate_argnums += (2, 3, 4, 5, 6, 7)
-        self._round = jax.jit(cohort_round, donate_argnums=donate_argnums)
+            donate_argnums = (1,)
+            if donate_staged:
+                donate_argnums += (
+                    (4, 5, 6, 7, 8) if self.staging == "resident" else (2, 3, 4, 5, 6, 7)
+                )
+        self._round = jax.jit(
+            cohort_round_resident if self.staging == "resident" else cohort_round,
+            donate_argnums=donate_argnums,
+        )
+        if self.staging == "resident":
+            # signature drops the rows arg: staged buffers sit at 4..7
+            full_donate: tuple[int, ...] = (1,) if self.donate else ()
+            if donate_staged:
+                full_donate += (4, 5, 6, 7)
+            self._round_full = jax.jit(
+                cohort_round_resident_full, donate_argnums=full_donate
+            )
 
-    def _device_schedule(self, sched, key_data: np.ndarray) -> tuple[jax.Array, ...]:
-        """Move one chunk's schedule to device, sharded over the mesh if any."""
-        arrays = (sched.x, sched.y, sched.mask, sched.step_valid, key_data, sched.weights)
-        if self.mesh is None or "data" not in self.mesh.axis_names:
-            return tuple(jax.device_put(a) for a in arrays)
-        sharding = NamedSharding(self.mesh, P("data"))
-        return tuple(jax.device_put(a, sharding) for a in arrays)
+    # ------------------------------------------------------------------
+    # staging helpers
+    # ------------------------------------------------------------------
+
+    def attach_device_cohort(self, clients: Sequence[ClientDataset]) -> DeviceCohort:
+        """Upload a federation's train arrays once for resident staging.
+
+        Rounds over any subset of ``clients`` then stage only index plans.
+        ``FederatedServer`` calls this with the (possibly recruited)
+        federation before round one; direct ``train_cohort`` callers may
+        skip it, in which case the first resident round attaches its own
+        cohort lazily.
+        """
+        self._device_cohort = build_device_cohort(clients, mesh=self._data_mesh)
+        return self._device_cohort
+
+    def _ensure_device_cohort(self, clients: Sequence[ClientDataset]) -> DeviceCohort:
+        dc = self._device_cohort
+        if dc is not None and all(dc.owns(c) for c in clients):
+            return dc
+        return self.attach_device_cohort(clients)
+
+    def _device_put_chunk(self, arrays: tuple) -> tuple:
+        """Stage one chunk's host arrays in a single pytree ``device_put``,
+        sharded over the mesh's data axis when one is present (every leaf
+        carries the client axis first)."""
+        if self._data_mesh is None:
+            return jax.device_put(arrays)
+        return jax.device_put(arrays, NamedSharding(self._data_mesh, P("data")))
 
     @staticmethod
-    def _stack_key_data(client_keys) -> np.ndarray:
-        """(C, ...) uint32 key data from typed keys, a key array, or raw data."""
+    def _stack_key_data(client_keys) -> np.ndarray | jax.Array:
+        """(C, ...) uint32 key data from typed keys, a key array, or raw data.
+
+        Device inputs (the ``chain_split_keys`` output) stay on device —
+        the round consumes them there."""
         if isinstance(client_keys, jax.Array) and jnp.issubdtype(
             client_keys.dtype, jax.dtypes.prng_key
         ):
-            return np.asarray(jax.random.key_data(client_keys))
-        if isinstance(client_keys, (np.ndarray, jax.Array)):
-            return np.asarray(client_keys)
+            return jax.random.key_data(client_keys)
+        if isinstance(client_keys, jax.Array):
+            return client_keys
+        if isinstance(client_keys, np.ndarray):
+            return client_keys
         return np.stack([np.asarray(jax.random.key_data(k)) for k in client_keys])
+
+    @staticmethod
+    def _chunk_key_data(all_key_data, start: int, count: int, padded: int):
+        """One chunk's key slice, zero-padded on the client axis to
+        ``padded`` rows, staying on whichever side (host/device) the stacked
+        keys already live.  The device path always materializes a fresh
+        buffer: a full-range slice is an identity in jax, and the round
+        step donates / eagerly deletes its staged inputs — handing it the
+        caller's own array would destroy it as a side effect."""
+        tail = all_key_data.shape[1:]
+        if isinstance(all_key_data, jax.Array):
+            sel = all_key_data[start : start + count]
+            if padded == count:
+                return jnp.copy(sel)
+            return jnp.zeros((padded, *tail), all_key_data.dtype).at[:count].set(sel)
+        out = np.zeros((padded, *tail), dtype=all_key_data.dtype)
+        out[:count] = all_key_data[start : start + count]
+        return out
+
+    # ------------------------------------------------------------------
+    # the round
+    # ------------------------------------------------------------------
 
     def train_cohort(
         self,
@@ -229,12 +411,12 @@ class CohortTrainer:
         ``client_keys`` holds one jax PRNG key per client, in the same order
         the sequential engine would have split them — a list of typed keys,
         a typed key array, or the stacked ``(C, ...)`` key data straight
-        from ``chain_split_keys``.  Pass a federation-wide
-        ``steps_per_epoch`` to pin the schedule's step axis across rounds —
-        otherwise it tracks this cohort's largest client and a different
-        participant mix can retrigger compilation.  Returns the round's
-        aggregated params, per-client mean local losses, and the number of
-        *real* (unpadded) local steps executed.
+        from ``chain_split_keys`` (which stays on device).  Pass a
+        federation-wide ``steps_per_epoch`` to pin the schedule's step axis
+        across rounds — otherwise it tracks this cohort's largest client and
+        a different participant mix can retrigger compilation.  Returns the
+        round's aggregated params, per-client mean local losses, and the
+        number of *real* (unpadded) local steps executed.
         """
         all_key_data = self._stack_key_data(client_keys)
         if len(clients) != len(all_key_data):
@@ -244,6 +426,8 @@ class CohortTrainer:
         if self.cohort_chunk is not None and self.cohort_chunk <= 0:
             raise ValueError(f"cohort_chunk must be positive, got {self.cohort_chunk}")
         chunk = self.cohort_chunk or len(clients)
+        resident = self.staging == "resident"
+        dcohort = self._ensure_device_cohort(clients) if resident else None
 
         baseline = live_buffer_stats() if self.track_stats else {"count": 0, "bytes": 0}
         peak = {"count": 0, "bytes": 0}
@@ -255,46 +439,123 @@ class CohortTrainer:
             peak["count"] = max(peak["count"], now["count"] - baseline["count"])
             peak["bytes"] = max(peak["bytes"], now["bytes"] - baseline["bytes"])
 
+        def stage_chunk(start: int) -> tuple[int, float, int, bool, tuple]:
+            """Build + upload one chunk's batch data.
+
+            Returns (host bytes staged, chunk weight, real client count,
+            full-cohort flag, device args for the round step).  Consumes
+            ``rng`` — must run strictly in chunk order (the
+            StagingPipeline's single ordered producer preserves this).
+            """
+            part = clients[start : start + chunk]
+            if resident:
+                plan = build_cohort_plan(
+                    [c.n_train for c in part],
+                    self.batch_size,
+                    self.local_epochs,
+                    rng,
+                    steps_per_epoch=spe,
+                    client_rows=[dcohort.row_of(c) for c in part],
+                    pad_index=dcohort.pad_index,
+                )
+                weight = float(plan.weights.sum())
+                plan = pad_cohort_plan(plan, self._num_shards)
+                key_data = self._chunk_key_data(
+                    all_key_data, start, len(part), plan.num_clients
+                )
+                # Full-cohort fast path: when the chunk is the whole
+                # resident federation in row order (every all-participants
+                # round), skip staging the rows vector and let the round
+                # consume the resident arrays without the row gather.
+                full = plan.num_clients == dcohort.num_rows and np.array_equal(
+                    plan.client_rows[: len(part)], np.arange(len(part))
+                )
+                host: tuple = (plan.sample_idx, plan.step_valid, plan.weights)
+                to_stage: tuple = (plan.sample_idx, plan.step_valid, key_data, plan.weights)
+                if not full:
+                    host = (plan.client_rows, *host)
+                    to_stage = (plan.client_rows, *to_stage)
+                staged = self._device_put_chunk(to_stage)
+            else:
+                sched = build_cohort_schedule(
+                    [c.train for c in part],
+                    self.batch_size,
+                    self.local_epochs,
+                    rng,
+                    steps_per_epoch=spe,
+                )
+                weight = float(sched.weights.sum())
+                # Pad the client axis with weight-0 dummy clients so it
+                # divides the mesh's data axis (all steps masked no-ops).
+                sched = pad_cohort_schedule(sched, self._num_shards)
+                key_data = self._chunk_key_data(
+                    all_key_data, start, len(part), sched.num_clients
+                )
+                full = False
+                host = (sched.x, sched.y, sched.mask, sched.step_valid, sched.weights)
+                staged = self._device_put_chunk(
+                    (sched.x, sched.y, sched.mask, sched.step_valid, key_data, sched.weights)
+                )
+            nbytes = sum(a.nbytes for a in host)
+            if isinstance(key_data, np.ndarray):
+                nbytes += key_data.nbytes
+            return nbytes, weight, len(part), full, staged
+
         acc = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.promote_types(p.dtype, jnp.float32)), params
         )
         total_weight = 0.0
-        per_losses = np.full(len(clients), np.nan, dtype=np.float32)
+        bytes_staged = 0
         num_chunks = 0
-        args: tuple[jax.Array, ...] = ()
-        for start in range(0, len(clients), chunk):
-            part = clients[start : start + chunk]
-            sched = build_cohort_schedule(
-                [c.train for c in part],
-                self.batch_size,
-                self.local_epochs,
-                rng,
-                steps_per_epoch=spe,
-            )
-            total_weight += float(sched.weights.sum())
-            # Pad the client axis with weight-0 dummy clients so it divides
-            # the mesh's data axis (their steps are all masked no-ops).
-            sched = pad_cohort_schedule(sched, self._num_shards)
-            key_data = np.zeros(
-                (sched.num_clients, *all_key_data.shape[1:]), dtype=all_key_data.dtype
-            )
-            key_data[: len(part)] = all_key_data[start : start + chunk]
-            staged = self._device_schedule(sched, key_data)
-            # Sampled before the previous chunk's buffers (still referenced by
-            # ``args`` on the non-donated path) are released: the plain path
-            # holds two chunks of schedule here, the donated path one.
-            sample()
-            args = staged
-            acc, losses = self._round(params, acc, *args)
-            if self.donate:
-                # Realize the donation of the schedule: the step consumed it,
-                # free the device copies now instead of at Python GC time.
-                for a in args:
-                    if not a.is_deleted():
-                        a.delete()
-            sample()
-            per_losses[start : start + len(part)] = np.asarray(losses)[: len(part)]
-            num_chunks += 1
+        # Per-chunk device loss arrays; fetched once after the whole round
+        # is dispatched so chunk k+1 never blocks on chunk k's readback.
+        chunk_losses: list[tuple[int, int, jax.Array]] = []
+        starts = range(0, len(clients), chunk)
+        pipeline: StagingPipeline | None = None
+        if resident and self.prefetch and len(starts) > 1:
+            pipeline = StagingPipeline(stage_chunk, starts)
+            staged_chunks = iter(pipeline)
+        else:
+            staged_chunks = (stage_chunk(s) for s in starts)
+
+        # Keeps the previous chunk's staged buffers alive into the next
+        # iteration's first sample() so the plain (non-donated) path's
+        # documented two-chunk window is actually observed in the stats.
+        held: list[tuple] = []
+        try:
+            for start, (nbytes, weight, count, full, args) in zip(starts, staged_chunks):
+                total_weight += weight
+                bytes_staged += nbytes
+                # Sampled before the previous chunk's buffers (still
+                # referenced by ``held`` on the non-donated path) are
+                # released: the plain rebuild path holds two chunks of
+                # schedule here, the donated path one.
+                sample()
+                held.clear()
+                if resident:
+                    step = self._round_full if full else self._round
+                    acc, losses = step(params, acc, dcohort.x, dcohort.y, *args)
+                else:
+                    acc, losses = self._round(params, acc, *args)
+                if self.donate:
+                    # Realize the donation of the staged chunk: the step
+                    # consumed it, free the device copies now instead of at
+                    # Python GC time.  The resident cohort arrays are not
+                    # part of ``args`` and stay alive.
+                    for a in args:
+                        if not a.is_deleted():
+                            a.delete()
+                sample()
+                chunk_losses.append((start, count, losses))
+                held.append(args)
+                num_chunks += 1
+        finally:
+            if pipeline is not None:
+                pipeline.close()
+
+        per_losses = np.full(len(clients), np.nan, dtype=np.float32)
+        for start, count, losses in chunk_losses:
+            per_losses[start : start + count] = np.asarray(losses)[:count]
 
         new_params = jax.tree.map(
             lambda t, ref: (t / total_weight).astype(ref.dtype), acc, params
@@ -303,6 +564,11 @@ class CohortTrainer:
             "chunks": num_chunks,
             "shards": self._num_shards,
             "donated": self.donate,
+            "staging": self.staging,
+            "prefetch": pipeline is not None,
+            "bytes_staged": bytes_staged,
+            "bytes_resident": dcohort.nbytes if resident else 0,
+            "plans_prefetched": pipeline.prefetched if pipeline is not None else 0,
             "peak_live_buffers": peak["count"],
             "peak_live_bytes": peak["bytes"],
         }

@@ -19,7 +19,7 @@ import numpy as np
 from repro.core.recruitment import RecruitmentConfig, RecruitmentResult, recruit
 from repro.data.pipeline import ClientDataset, cohort_steps_per_epoch
 from repro.federated.client import LocalTrainer
-from repro.federated.cohort import CohortTrainer, chain_split_keys
+from repro.federated.cohort import STAGING_MODES, CohortTrainer, chain_split_keys
 from repro.federated.fedavg import aggregate
 from repro.federated.selection import select_clients
 from repro.optim.adamw import AdamW
@@ -55,10 +55,24 @@ class FederatedConfig:
     # accumulator, eager release of consumed schedule chunks).  Keep on;
     # the switch exists to measure the memory difference.
     donate_buffers: bool = True
+    # Vectorized engine: how batch data reaches the device each round.
+    # "resident" (default) uploads the federation's train arrays once and
+    # stages only compact int32 index plans per round, with the batch
+    # gather happening on device; "rebuild" re-materializes and re-uploads
+    # the full (clients, steps, batch, features) schedule every round
+    # (PR 2's path, kept as the staging reference oracle).
+    staging: str = "resident"
+    # Resident staging: double-buffer chunk plans on a background thread
+    # (build/upload chunk k+1 while chunk k trains).  Numerically a no-op.
+    prefetch: bool = True
 
     def __post_init__(self) -> None:
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; choose from {ENGINES}")
+        if self.staging not in STAGING_MODES:
+            raise ValueError(
+                f"unknown staging {self.staging!r}; choose from {STAGING_MODES}"
+            )
 
 
 @dataclasses.dataclass
@@ -116,6 +130,8 @@ class FederatedServer:
             cohort_chunk=config.cohort_chunk,
             mesh=config.mesh,
             donate=config.donate_buffers,
+            staging=config.staging,
+            prefetch=config.prefetch,
         )
 
     def build_federation(self) -> tuple[np.ndarray, RecruitmentResult | None]:
@@ -137,6 +153,13 @@ class FederatedServer:
         jax_rng = jax.random.key(cfg.seed)
 
         federation_ids, recruitment = self.build_federation()
+        if cfg.engine == "vectorized" and cfg.staging == "resident":
+            # One host->device upload for the whole federation (only the
+            # recruited clients — unrecruited ones never ship anything);
+            # every round after this stages just an int32 index plan.
+            self.cohort_trainer.attach_device_cohort(
+                [self.all_clients[int(i)] for i in federation_ids]
+            )
         params = init_params
         history: list[RoundRecord] = []
         # Pin the vectorized schedule's step axis to the federation-wide max

@@ -1,0 +1,109 @@
+"""Double-buffered staging: build/upload chunk k+1 while chunk k trains.
+
+``CohortTrainer`` consumes a federated round chunk by chunk.  Each chunk
+needs host work (drawing the shuffle permutations into an index plan) and a
+host->device transfer before its jitted step can run.  Done inline, that
+work serializes with the round computation; done here, a single producer
+thread stays exactly one chunk ahead of the consumer through a depth-1
+queue — classic double buffering (the donated round path frees the memory
+that makes the second buffer affordable).
+
+One producer thread, processing chunks strictly in order, is load-bearing:
+plan building consumes the shared numpy RNG stream, and the sequential /
+rebuild / resident parity contract requires that stream to be drawn in
+exactly the inline order.  ``StagingPipeline`` never reorders work — it
+only overlaps it with the device.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Sequence
+
+
+class StagingPipeline:
+    """Runs ``stage_fn`` over ``items`` one chunk ahead of iteration.
+
+    ``stage_fn(item)`` is called on a background thread, strictly in item
+    order, and results are handed out in the same order by ``__iter__``.
+    ``depth`` bounds the staged-but-unconsumed run-ahead (depth 1 = while
+    the consumer works on chunk k, exactly chunk k+1 is being staged —
+    double buffering).  Exceptions raised by ``stage_fn`` surface on the
+    consuming thread at the position the failed item would have occupied.
+
+    ``prefetched`` counts chunks that were already staged when the consumer
+    asked for them — the round's overlap win, reported in
+    ``last_round_stats["plans_prefetched"]``.
+    """
+
+    def __init__(
+        self,
+        stage_fn: Callable[[Any], Any],
+        items: Sequence[Any],
+        *,
+        depth: int = 1,
+    ) -> None:
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._stage_fn = stage_fn
+        self._items = list(items)
+        self._queue: queue.Queue = queue.Queue()
+        # The run-ahead bound.  The producer takes a slot BEFORE staging an
+        # item and the consumer returns it when the item is handed out, so
+        # at most ``depth`` staged-but-unconsumed chunks exist at any time
+        # (depth 1 = while chunk k trains, only chunk k+1 is staged — true
+        # double buffering; a bounded queue alone would let the producer
+        # run a full chunk further ahead).
+        self._slots = threading.Semaphore(depth)
+        self._stop = threading.Event()
+        self.prefetched = 0
+        self._thread = threading.Thread(
+            target=self._produce, name="cohort-staging", daemon=True
+        )
+        self._thread.start()
+
+    def _produce(self) -> None:
+        try:
+            for item in self._items:
+                if not self._acquire_slot():
+                    return  # close() abandoned the pipeline mid-round
+                staged = self._stage_fn(item)
+                self._queue.put((staged, None))
+        except BaseException as exc:  # surfaced on the consumer thread
+            self._queue.put((None, exc))
+
+    def _acquire_slot(self) -> bool:
+        # Bounded wait that gives up if the consumer abandoned the pipeline
+        # (close() sets the stop flag), so the worker can never hang.
+        while not self._stop.is_set():
+            if self._slots.acquire(timeout=0.1):
+                return True
+        return False
+
+    def __iter__(self) -> Iterator[Any]:
+        for _ in range(len(self._items)):
+            try:
+                staged, exc = self._queue.get_nowait()
+                hit = True
+            except queue.Empty:
+                staged, exc = self._queue.get()
+                hit = False
+            self._slots.release()
+            if exc is not None:
+                self.close()
+                raise exc
+            if hit:
+                self.prefetched += 1
+            yield staged
+        self.close()
+
+    def close(self) -> None:
+        """Stop the producer and release the queue; idempotent."""
+        self._stop.set()
+        while True:
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
