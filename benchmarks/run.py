@@ -239,18 +239,21 @@ def bench_pipeline(
     a background thread).  Reports per-variant steady-state round seconds,
     per-round host->device bytes, and the rebuild/resident speedup and byte
     ratio; with more than one visible device (or ``--mesh-auto``) the same
-    grid additionally runs through the shard_map client-axis path.  Writes
-    ``BENCH_pipeline.json``.
+    grid additionally runs through the shard_map client-axis path.  A
+    facade-overhead probe rides along: the policy-API ``Federation`` round
+    program vs the bare PR-3 ``chain_split_keys`` + ``train_cohort`` loop
+    (budget: <= 2% per-round overhead).  Writes ``BENCH_pipeline.json``.
     """
     import jax
 
-    from repro.experiments.paper import run_staging_comparison
+    from repro.experiments.paper import run_facade_overhead, run_staging_comparison
 
     report = {
         "bench": "staging_pipeline",
         "single_device": run_staging_comparison(
             rounds=rounds, total_stays=total_stays, cohort_chunk=cohort_chunk
         ),
+        "facade_overhead": run_facade_overhead(),
     }
     if mesh_auto and jax.device_count() > 1:
         # Mesh leg runs unchunked (see run_staging_comparison), where the
@@ -277,6 +280,13 @@ def bench_pipeline(
             f"speedup={rep['speedup']:.2f}x;bytes_ratio={rep['bytes_ratio']:.1f}x"
             f";max_param_diff={rep['max_param_diff']:.2e}",
         )
+    facade = report["facade_overhead"]
+    emit(
+        "pipeline_facade_overhead",
+        1e6 * facade["facade_round_s"],
+        f"overhead={100 * facade['overhead_frac']:+.2f}%"
+        f";within_budget={facade['within_budget']}",
+    )
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
     print(f"# wrote {out_path}", flush=True)
 

@@ -8,6 +8,33 @@ Produces the SC-vs-SRC comparison that is the paper's headline claim:
 recruited federations match or beat standard FedAvg at a fraction of the
 training cost.
 
+Policy API
+----------
+Every paper setting is a 3-line policy combination for the
+``repro.federated.api.Federation`` facade — a recruitment spec, a selection
+spec, and an aggregator spec::
+
+    FederationConfig(recruitment="nu-greedy",      # the paper's greedy rule
+                     selection="uniform:0.1",      # 10% sampled per round
+                     aggregator="fedavg")          # weighted averaging
+
+Built-in registries (``repro.federated.available_policies()``):
+
+* recruitment — ``nu-greedy`` (optionally ``nu-greedy:balanced`` /
+  ``nu-greedy:gamma_dv,gamma_sa,gamma_th``), ``random-k:K`` (the
+  recruitment control), ``top-n-samples:N``, ``all``
+* selection — ``uniform[:frac|count]``, ``round-robin[:frac|count]``
+  (deterministic rotation), ``loss-weighted[:frac|count]`` (sample by last
+  observed local loss)
+* aggregator — ``fedavg``, ``trimmed-mean[:trim]`` (coordinate-wise robust
+  mean), ``hierarchical[:regions]`` (two-level FedAvg: regional
+  sub-federations psum first — the seed of the multi-pod aggregation tier)
+
+``--recruitment`` / ``--selection`` / ``--aggregator`` below override the
+per-setting defaults with any spec; user-defined policies are ~20 lines
+(see ``examples/custom_policy.py``).  The legacy ``FederatedServer`` /
+``FederatedConfig`` remain as deprecation shims over this facade.
+
 Paper-scale runs
 ----------------
 The full 189-client experiment grid (all five section-6 model settings,
@@ -39,7 +66,8 @@ head to head by ``python benchmarks/run.py --mode pipeline``, which writes
 
 This driver accepts the same engine controls (``--engine``,
 ``--cohort-chunk``, ``--mesh auto``, ``--no-donate``, ``--staging``,
-``--no-prefetch``) for one-off runs.
+``--no-prefetch``) plus the policy overrides (``--selection``,
+``--aggregator``) for one-off runs.
 """
 
 import argparse
@@ -78,6 +106,17 @@ def main() -> None:
         help="resident staging: build chunk plans inline instead of on the "
         "double-buffering background thread",
     )
+    ap.add_argument(
+        "--selection", default=None,
+        help="override the per-round selection policy spec (e.g. "
+        "'round-robin:0.1', 'loss-weighted:0.1'); default derives the "
+        "paper's uniform sampling from the setting",
+    )
+    ap.add_argument(
+        "--aggregator", default="fedavg",
+        help="aggregation policy spec ('fedavg', 'trimmed-mean:0.1', "
+        "'hierarchical:4')",
+    )
     args = ap.parse_args()
 
     # paper-faithful settings, trained on the selected engine
@@ -89,6 +128,8 @@ def main() -> None:
         donate_buffers=not args.no_donate,
         staging=args.staging,
         prefetch=not args.no_prefetch,
+        selection=args.selection,
+        aggregator=args.aggregator,
     )
     print(f"engine: {args.engine}")
     cohort = build_cohort(exp, seed=args.seed)

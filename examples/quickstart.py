@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core import BALANCED, recruit
 from repro.data import CohortConfig, build_client_datasets, generate_cohort, global_dataset
-from repro.federated import FederatedConfig, FederatedServer
+from repro.federated import Federation, FederationConfig
 from repro.metrics import evaluate_predictions
 from repro.models.gru import GRUConfig, gru_apply, init_gru, make_loss_fn
 from repro.optim import AdamW
@@ -29,24 +29,27 @@ def main() -> None:
         f"gamma_th={BALANCED.gamma_th}; threshold iota={result.iota:.2f})"
     )
 
-    # 3. federated training on the recruited subset (Federated-SRC setting).
+    # 3. federated training as a policy combination (Federated-SRC setting):
+    #    nu-greedy recruitment + 10% uniform per-round sampling + FedAvg.
+    #    Swap any stage by spec string — recruitment="random-k:20",
+    #    selection="round-robin:0.1", aggregator="trimmed-mean:0.1", ... —
+    #    or pass your own policy instance (see examples/custom_policy.py).
     #    The vectorized engine trains every round participant inside ONE
-    #    jitted vmap; engine="sequential" is the per-client reference loop.
-    #    Client data is uploaded to device once (staging="resident") — each
-    #    round stages only an int32 index plan and gathers batches on device.
+    #    jitted vmap; client data is uploaded to device once
+    #    (staging="resident") and rounds stage only int32 index plans.
     model_cfg = GRUConfig()
-    fed_cfg = FederatedConfig(
-        rounds=5, local_epochs=2, participation_fraction=0.1,
-        recruitment=BALANCED, seed=0, engine="vectorized",
+    fed_cfg = FederationConfig(
+        rounds=5, local_epochs=2, seed=0, engine="vectorized",
+        recruitment="nu-greedy", selection="uniform:0.1", aggregator="fedavg",
     )
     print(f"engine: {fed_cfg.engine}")
-    server = FederatedServer(
+    federation = Federation(
         fed_cfg,
         clients,
         make_loss_fn(model_cfg),
         AdamW(learning_rate=5e-3, weight_decay=5e-3),
     )
-    out = server.run(
+    out = federation.run(
         init_gru(jax.random.key(0), model_cfg),
         progress=lambda r: print(
             f"  round {r.round_index}: {len(r.participant_ids)} clients, "

@@ -12,9 +12,11 @@ from repro.core.recruitment import (
     BALANCED,
     DATA_GREEDY,
     QUALITY_GREEDY,
+    RECRUITMENT_PRESETS,
     ClientStats,
     RecruitmentConfig,
     RecruitmentResult,
+    preset_recruitment,
     recruit,
     recruitment_curve,
     representativeness,
@@ -30,9 +32,11 @@ __all__ = [
     "BALANCED",
     "DATA_GREEDY",
     "QUALITY_GREEDY",
+    "RECRUITMENT_PRESETS",
     "ClientStats",
     "RecruitmentConfig",
     "RecruitmentResult",
+    "preset_recruitment",
     "recruit",
     "recruitment_curve",
     "representativeness",

@@ -58,6 +58,22 @@ BALANCED = RecruitmentConfig(gamma_dv=0.5, gamma_sa=0.5, gamma_th=0.1)
 QUALITY_GREEDY = RecruitmentConfig(gamma_dv=1.0, gamma_sa=0.01, gamma_th=0.1)
 DATA_GREEDY = RecruitmentConfig(gamma_dv=0.01, gamma_sa=1.0, gamma_th=0.1)
 
+# Named presets, addressable from policy spec strings ("nu-greedy:balanced");
+# the registry the Federation facade's recruitment stage resolves against.
+RECRUITMENT_PRESETS: dict[str, RecruitmentConfig] = {
+    "balanced": BALANCED,
+    "quality-greedy": QUALITY_GREEDY,
+    "data-greedy": DATA_GREEDY,
+}
+
+
+def preset_recruitment(name: str) -> RecruitmentConfig:
+    """Look up a section-6.2 preset by name (``"balanced"`` etc.)."""
+    if name not in RECRUITMENT_PRESETS:
+        known = ", ".join(sorted(RECRUITMENT_PRESETS))
+        raise ValueError(f"unknown recruitment preset {name!r}; choose from: {known}")
+    return RECRUITMENT_PRESETS[name]
+
 
 @dataclasses.dataclass(frozen=True)
 class RecruitmentResult:

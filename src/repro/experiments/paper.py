@@ -12,26 +12,34 @@ Five model settings (paper section 6):
 plus the section 6.2 ablations (quality-greedy / data-greedy) and the
 gamma_th sweep of Fig. 2.  Each run reports the paper's four metrics plus
 wall-time tau and simulated local-step counts.
+
+Every federated setting is expressed as a *policy combination* for the
+``Federation`` facade (``policies_for``): a recruitment spec, a selection
+spec, and an aggregator spec — three strings.  New scenarios (random
+recruitment controls, trimmed-mean robustness, regional hierarchies) are
+one registry entry each; see ``repro.federated.api``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
 import numpy as np
 
-from repro.core.recruitment import (
-    BALANCED,
-    DATA_GREEDY,
-    QUALITY_GREEDY,
-    RecruitmentConfig,
+from repro.core.recruitment import DATA_GREEDY, QUALITY_GREEDY
+from repro.data.pipeline import (
+    ArrayDataset,
+    build_client_datasets,
+    cohort_steps_per_epoch,
+    global_dataset,
 )
-from repro.data.pipeline import ArrayDataset, build_client_datasets, global_dataset
 from repro.data.synth_eicu import NUM_HOSPITALS, Cohort, CohortConfig, generate_cohort
+from repro.federated.api import Federation, FederationConfig
 from repro.federated.central import CentralConfig, train_central
-from repro.federated.server import FederatedConfig, FederatedServer
+from repro.federated.cohort import CohortTrainer, chain_split_keys
 from repro.metrics.regression import evaluate_predictions
 from repro.models.gru import GRUConfig, gru_apply, init_gru, make_loss_fn
 from repro.optim.adamw import AdamW
@@ -80,22 +88,38 @@ class ExperimentConfig:
     staging: str = "resident"
     # Resident staging: double-buffer chunk plans on a background thread.
     prefetch: bool = True
+    # Policy overrides for the Federation facade.  ``selection=None``
+    # derives the paper's uniform sampling from the setting; ``aggregator``
+    # is any registry spec or instance ("fedavg", "trimmed-mean:0.1",
+    # "hierarchical:4", ...).
+    selection: Any = None
+    aggregator: Any = "fedavg"
 
 
-def recruitment_for(setting: str, exp: ExperimentConfig) -> RecruitmentConfig | None:
-    if setting in ("central", "federated-ac", "federated-sc"):
-        return None
+def policies_for(setting: str, exp: ExperimentConfig) -> dict[str, Any]:
+    """One paper setting -> the three policy specs of the Federation facade.
+
+    This is the whole translation table of section 6: ac/sc/arc/src and the
+    6.2 ablations are each a (recruitment, selection, aggregator) triple.
+    """
     if setting == "federated-src-qg":
-        return dataclasses.replace(QUALITY_GREEDY, gamma_th=exp.gamma_th)
-    if setting == "federated-src-dg":
-        return dataclasses.replace(DATA_GREEDY, gamma_th=exp.gamma_th)
-    return RecruitmentConfig(exp.gamma_dv, exp.gamma_sa, exp.gamma_th)
-
-
-def participation_for(setting: str, exp: ExperimentConfig) -> float | None:
-    if setting in ("federated-ac", "federated-arc"):
-        return None  # everyone, every round
-    return exp.participation_fraction
+        rec: Any = f"nu-greedy:{QUALITY_GREEDY.gamma_dv},{QUALITY_GREEDY.gamma_sa},{exp.gamma_th}"
+    elif setting == "federated-src-dg":
+        rec = f"nu-greedy:{DATA_GREEDY.gamma_dv},{DATA_GREEDY.gamma_sa},{exp.gamma_th}"
+    elif setting in ("federated-arc", "federated-src"):
+        rec = f"nu-greedy:{exp.gamma_dv},{exp.gamma_sa},{exp.gamma_th}"
+    else:
+        rec = "all"
+    if exp.selection is not None:
+        sel: Any = exp.selection
+    elif setting in ("federated-ac", "federated-arc"):
+        sel = "uniform"  # everyone, every round
+    else:
+        # float() keeps the spec grammar honest: in a spec string an int is
+        # a count, a float a fraction — participation_fraction=1 must render
+        # as "uniform:1.0" (everyone), not "uniform:1" (one client).
+        sel = f"uniform:{float(exp.participation_fraction)}"
+    return {"recruitment": rec, "selection": sel, "aggregator": exp.aggregator}
 
 
 def build_cohort(exp: ExperimentConfig, seed: int) -> Cohort:
@@ -143,12 +167,11 @@ def run_setting(
         )
     else:
         clients = build_client_datasets(cohort)
-        fed_cfg = FederatedConfig(
+        fed_cfg = FederationConfig(
             rounds=exp.rounds,
             local_epochs=exp.local_epochs,
             batch_size=exp.batch_size,
-            participation_fraction=participation_for(setting, exp),
-            recruitment=recruitment_for(setting, exp),
+            **policies_for(setting, exp),
             seed=seed,
             engine=exp.engine,
             cohort_chunk=exp.cohort_chunk,
@@ -157,17 +180,21 @@ def run_setting(
             staging=exp.staging,
             prefetch=exp.prefetch,
         )
-        server = FederatedServer(fed_cfg, clients, loss_fn, optimizer)
-        result = server.run(init_params, progress=progress)
+        federation = Federation(fed_cfg, clients, loss_fn, optimizer)
+        result = federation.run(init_params, progress=progress)
         params = result.params
+        summary = result.summary()
         info.update(
             tau_s=result.total_wall_time_s,
             local_steps=result.total_local_steps,
             federation_size=int(result.federation_ids.size),
             recruited=None if result.recruitment is None else result.recruitment.num_recruited,
-            engine=exp.engine,
+            # What actually ran: stacked-mode aggregators force the
+            # per-client path regardless of the configured engine.
+            engine=federation.effective_engine,
             round_times_s=[r.wall_time_s for r in result.history],
-            cohort_stats=server.cohort_trainer.last_round_stats,
+            cohort_stats=federation.cohort_trainer.last_round_stats,
+            comm={k: summary[k] for k in ("params_down", "params_up", "bytes_transferred")},
         )
 
     y_hat = np.asarray(_predict(params, model_cfg, test))
@@ -244,8 +271,6 @@ def run_paper_scale(
     all-clients round with buffer donation on and off and records both
     footprints — the documented memory win of the donated path.
     """
-    from repro.federated.cohort import CohortTrainer
-
     cohort_cfg = paper_scale_cohort_config(total_stays=total_stays)
     cohort = generate_cohort(cohort_cfg, seed=seed)
     clients = build_client_datasets(cohort)
@@ -400,11 +425,11 @@ def run_staging_comparison(
     results: dict[str, Any] = {}
     params_by_variant: dict[str, Any] = {}
     for variant in variants:
-        fed_cfg = FederatedConfig(
+        fed_cfg = FederationConfig(
             rounds=rounds,
             local_epochs=local_epochs,
             batch_size=batch_size,
-            participation_fraction=None,  # all 189 clients, every round
+            selection="uniform",  # all 189 clients, every round
             seed=seed,
             engine="vectorized",
             mesh=mesh,
@@ -418,14 +443,14 @@ def run_staging_comparison(
         # repeat so the report never mixes measurements across runs.
         best: dict[str, Any] | None = None
         for _ in range(max(repeats, 1)):
-            server = FederatedServer(
+            federation = Federation(
                 fed_cfg,
                 clients,
                 loss_fn,
                 AdamW(learning_rate=5e-3, weight_decay=5e-3),
             )
-            out = server.run(params0)
-            stats = server.cohort_trainer.last_round_stats or {}
+            out = federation.run(params0)
+            stats = federation.cohort_trainer.last_round_stats or {}
             round_time = _mean_round_time(
                 {
                     "round_times_s": [r.wall_time_s for r in out.history],
@@ -487,6 +512,117 @@ def run_staging_comparison(
             for a, b in zip(ref, jax.tree.leaves(other))
         ]
         report["max_param_diff"] = max(diffs)
+    return report
+
+
+def run_facade_overhead(
+    *,
+    rounds: int = 9,
+    local_epochs: int = 1,
+    batch_size: int = 8,
+    seed: int = 0,
+    total_stays: int = 189 * 16,
+    repeats: int = 3,
+    verbose: bool = True,
+) -> dict[str, Any]:
+    """The facade tax: ``Federation.run`` vs the bare PR-3 hot loop.
+
+    Both drive the identical workload — the full 189-client federation,
+    all participants every round, resident staging, one ``chain_split_keys``
+    + ``train_cohort`` per round — but the bare loop has zero policy
+    dispatch, no selection call, no comm accounting, no ``RoundRecord``.
+    The facade's round program must cost <= 2% over that floor (the bench
+    records the measured fraction in ``BENCH_pipeline.json``; per-round
+    training dominates by orders of magnitude, so anything above noise
+    level indicates the round program grew a hot-path sin).
+
+    A 2% budget is far below CI containers' round-to-round throttling
+    noise (individual rounds swing +-25%), so the estimator is the *floor*:
+    the minimum steady-state round over ``repeats`` alternating bare/facade
+    runs.  Timing noise on this workload is strictly additive, so the
+    per-path minimum converges on the true per-round cost as samples grow
+    (``rounds`` x ``repeats`` per path) and the facade/bare floor ratio
+    isolates the systematic overhead — a median would report the
+    throttling weather instead.  The report carries the per-repeat floors
+    (``bare_floors`` / ``facade_floors``): their spread is the probe's own
+    resolution, and an |overhead_frac| inside that spread — negative
+    values included — reads as "no overhead resolvable", not as a
+    measured speedup.
+    """
+    cohort_cfg = paper_scale_cohort_config(total_stays=total_stays)
+    cohort = generate_cohort(cohort_cfg, seed=seed)
+    clients = build_client_datasets(cohort)
+    model_cfg = GRUConfig(hidden_dim=8, num_layers=1)
+    loss_fn = make_loss_fn(model_cfg)
+    params0 = init_gru(jax.random.key(seed), model_cfg)
+
+    def bare_rounds() -> list[float]:
+        trainer = CohortTrainer(
+            loss_fn=loss_fn,
+            optimizer=AdamW(learning_rate=5e-3, weight_decay=5e-3),
+            batch_size=batch_size,
+            local_epochs=local_epochs,
+            staging="resident",
+        )
+        trainer.attach_device_cohort(clients)
+        rng = np.random.default_rng(seed)
+        jax_rng = jax.random.key(seed)
+        spe = cohort_steps_per_epoch([c.n_train for c in clients], batch_size)
+        params, times = params0, []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            jax_rng, key_data = chain_split_keys(jax_rng, len(clients))
+            params, _, _ = trainer.train_cohort(
+                params, clients, rng, key_data, steps_per_epoch=spe
+            )
+            times.append(time.perf_counter() - t0)
+        jax.block_until_ready(params)
+        return times
+
+    def facade_rounds() -> list[float]:
+        federation = Federation(
+            FederationConfig(
+                rounds=rounds, local_epochs=local_epochs, batch_size=batch_size,
+                recruitment="all", selection="uniform", aggregator="fedavg", seed=seed,
+            ),
+            clients,
+            loss_fn,
+            AdamW(learning_rate=5e-3, weight_decay=5e-3),
+        )
+        out = federation.run(params0)
+        jax.block_until_ready(out.params)
+        return [r.wall_time_s for r in out.history]
+
+    def floor(times: list[float]) -> float:
+        return float(np.min(times[1:] if len(times) > 1 else times))
+
+    # Alternate the two paths so a throttling window cannot hit only one.
+    bare_floors, facade_floors = [], []
+    for _ in range(max(repeats, 1)):
+        bare_floors.append(floor(bare_rounds()))
+        facade_floors.append(floor(facade_rounds()))
+    bare, facade = min(bare_floors), min(facade_floors)
+    overhead = facade / bare - 1.0
+    report = {
+        "bench": "facade_overhead",
+        "num_clients": len(clients),
+        "rounds": rounds,
+        "batch_size": batch_size,
+        "repeats": repeats,
+        "bare_round_s": bare,
+        "facade_round_s": facade,
+        "bare_floors": bare_floors,
+        "facade_floors": facade_floors,
+        "overhead_frac": overhead,
+        "budget_frac": 0.02,
+        "within_budget": bool(overhead <= 0.02),
+    }
+    if verbose:
+        print(
+            f"  [facade] bare={bare:.4f}s facade={facade:.4f}s "
+            f"overhead={100 * overhead:+.2f}% (budget 2%)",
+            flush=True,
+        )
     return report
 
 

@@ -7,6 +7,12 @@ broadcast across a leading client axis and a whole FedAvg round — every
 participant's ``local_epochs`` of AdamW steps — runs inside a single
 ``jax.lax.scan`` over a ``jax.vmap``-ed per-client step.
 
+This engine is orchestrated by the ``repro.federated.api.Federation``
+round program: one ``train_cohort`` call is one FedAvg-reduced group
+("reduced"-mode aggregation; "grouped" aggregators like hierarchical
+FedAvg call it once per regional sub-federation), so new policies compose
+around the hot path without forking it.
+
 Parity with the sequential oracle is exact by construction:
 
 * batch data consumes the shared numpy RNG in the same client-major order

@@ -70,6 +70,29 @@ def weighted_sum_stacked(stacked: PyTree, weights, axis_name: str | None = None)
     return jax.tree.map(_sum, stacked)
 
 
+def trimmed_mean_stacked(stacked: PyTree, trim: float) -> PyTree:
+    """Coordinate-wise trimmed mean over the leading client axis.
+
+    For every scalar coordinate, drop the ``floor(trim * C)`` smallest and
+    largest client values and average the survivors — the classic robust
+    aggregation rule (Yin et al. 2018).  Unweighted by construction (a
+    weighted trim would let a heavy outlier buy its way back in);
+    ``trim = 0`` degenerates to the plain coordinate mean.
+    """
+    if not (0.0 <= trim < 0.5):
+        raise ValueError(f"trim fraction must be in [0, 0.5), got {trim}")
+
+    def _trim(leaf):
+        c = leaf.shape[0]
+        # trim < 0.5 guarantees 2k < c, so at least one client survives.
+        k = int(np.floor(trim * c))
+        ct = jnp.promote_types(leaf.dtype, jnp.float32)
+        kept = jnp.sort(leaf.astype(ct), axis=0)[k : c - k]
+        return jnp.mean(kept, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(_trim, stacked)
+
+
 def delta(new: PyTree, old: PyTree) -> PyTree:
     return jax.tree.map(lambda a, b: a - b, new, old)
 

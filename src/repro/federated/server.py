@@ -1,36 +1,64 @@
-"""Server-side orchestration of federated training (paper section 4.4).
+"""Legacy server facade — thin deprecation shims over ``repro.federated.api``.
 
-The server (i) initializes the model, (ii) broadcasts it to the selected
-clients, (iii) aggregates returned parameters with FedAvg, (iv) repeats for
-``rounds`` communication rounds.  With recruitment enabled, the federation
-is built from the recruited subset *before* round one — unrecruited clients
-never receive the model at all (that is the point of the paper).
+``FederatedServer`` / ``FederatedConfig`` were the pre-policy orchestration
+surface: one hard-wired pipeline of paper nu-greedy recruitment, uniform
+per-round sampling, and FedAvg.  The runtime now lives in
+:mod:`repro.federated.api` as a :class:`~repro.federated.api.Federation`
+facade with pluggable ``RecruitmentPolicy`` / ``SelectionPolicy`` /
+``Aggregator`` stages; the classes here only translate the old declarative
+config onto those policies so every existing invocation keeps working::
+
+    FederatedConfig(recruitment=RecruitmentConfig(...), participation_fraction=0.1)
+        -> FederationConfig(recruitment=NuGreedyRecruitment(...),
+                            selection=UniformSelection(fraction=0.1),
+                            aggregator="fedavg")
+
+New code should construct a ``Federation`` directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Any, Callable, Sequence
 
-import jax
 import numpy as np
 
-from repro.core.recruitment import RecruitmentConfig, RecruitmentResult, recruit
-from repro.data.pipeline import ClientDataset, cohort_steps_per_epoch
-from repro.federated.client import LocalTrainer
-from repro.federated.cohort import STAGING_MODES, CohortTrainer, chain_split_keys
-from repro.federated.fedavg import aggregate
-from repro.federated.selection import select_clients
+from repro.core.recruitment import RecruitmentConfig, RecruitmentResult
+from repro.data.pipeline import ClientDataset
+from repro.federated.api import (
+    ENGINES,
+    Federation,
+    FederationConfig,
+    FederatedRunResult,
+    NuGreedyRecruitment,
+    RoundRecord,
+    UniformSelection,
+)
+from repro.federated.cohort import STAGING_MODES
 from repro.optim.adamw import AdamW
 
-PyTree = Any
+__all__ = [
+    "ENGINES",
+    "FederatedConfig",
+    "FederatedRunResult",
+    "FederatedServer",
+    "RoundRecord",
+]
 
-ENGINES = ("sequential", "vectorized")
+PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
 class FederatedConfig:
+    """Deprecated: the pre-policy config.  Use ``FederationConfig`` instead.
+
+    Field semantics are unchanged; ``to_federation()`` is the mapping onto
+    the policy API (``recruitment=None`` -> ``"all"``, a
+    ``RecruitmentConfig`` -> nu-greedy, ``participation_fraction`` ->
+    uniform selection, aggregation is always FedAvg).
+    """
+
     rounds: int = 15
     local_epochs: int = 4
     batch_size: int = 128
@@ -44,26 +72,16 @@ class FederatedConfig:
     # "sequential" is the per-client Python loop, kept as the reference
     # oracle (both produce matching aggregated params within 1e-5).
     engine: str = "vectorized"
-    # Vectorized engine: max clients per vmapped call (None = all at once);
-    # lower it to bound peak memory on big federations.
+    # Vectorized engine: max clients per vmapped call (None = all at once).
     cohort_chunk: int | None = None
-    # Optional device mesh for the vectorized engine: shards the client
-    # axis over the mesh's "data" axis via shard_map.  "auto" builds a 1-D
-    # data mesh over every visible device (None when only one is visible).
+    # Optional device mesh for the vectorized engine ("auto" = 1-D data mesh).
     mesh: Any = None
-    # Vectorized engine: donate round buffers to the jitted step (in-place
-    # accumulator, eager release of consumed schedule chunks).  Keep on;
-    # the switch exists to measure the memory difference.
+    # Vectorized engine: donate round buffers to the jitted step.
     donate_buffers: bool = True
-    # Vectorized engine: how batch data reaches the device each round.
-    # "resident" (default) uploads the federation's train arrays once and
-    # stages only compact int32 index plans per round, with the batch
-    # gather happening on device; "rebuild" re-materializes and re-uploads
-    # the full (clients, steps, batch, features) schedule every round
-    # (PR 2's path, kept as the staging reference oracle).
+    # "resident" uploads client data once + stages int32 plans per round;
+    # "rebuild" re-uploads the full schedule every round.
     staging: str = "resident"
-    # Resident staging: double-buffer chunk plans on a background thread
-    # (build/upload chunk k+1 while chunk k trains).  Numerically a no-op.
+    # Resident staging: double-buffer chunk plans on a background thread.
     prefetch: bool = True
 
     def __post_init__(self) -> None:
@@ -74,38 +92,30 @@ class FederatedConfig:
                 f"unknown staging {self.staging!r}; choose from {STAGING_MODES}"
             )
 
-
-@dataclasses.dataclass
-class RoundRecord:
-    round_index: int
-    participant_ids: list[int]
-    mean_local_loss: float
-    local_steps: int
-    comm_params: int       # parameter tensors exchanged (down + up), in clients
-    wall_time_s: float
-
-
-@dataclasses.dataclass
-class FederatedRunResult:
-    params: PyTree
-    history: list[RoundRecord]
-    recruitment: RecruitmentResult | None
-    federation_ids: np.ndarray
-    total_wall_time_s: float
-    total_local_steps: int
-
-    def summary(self) -> dict[str, Any]:
-        return {
-            "rounds": len(self.history),
-            "federation_size": int(self.federation_ids.size),
-            "recruited": None if self.recruitment is None else self.recruitment.num_recruited,
-            "total_wall_time_s": self.total_wall_time_s,
-            "total_local_steps": self.total_local_steps,
-        }
+    def to_federation(self) -> FederationConfig:
+        """The policy-API equivalent of this legacy config."""
+        recruitment = (
+            "all" if self.recruitment is None else NuGreedyRecruitment(self.recruitment)
+        )
+        return FederationConfig(
+            rounds=self.rounds,
+            local_epochs=self.local_epochs,
+            batch_size=self.batch_size,
+            recruitment=recruitment,
+            selection=UniformSelection(fraction=self.participation_fraction),
+            aggregator="fedavg",
+            seed=self.seed,
+            engine=self.engine,
+            cohort_chunk=self.cohort_chunk,
+            mesh=self.mesh,
+            donate_buffers=self.donate_buffers,
+            staging=self.staging,
+            prefetch=self.prefetch,
+        )
 
 
 class FederatedServer:
-    """Runs the FedAvg protocol over in-process clients."""
+    """Deprecated: runs the FedAvg protocol via the ``Federation`` facade."""
 
     def __init__(
         self,
@@ -114,103 +124,34 @@ class FederatedServer:
         loss_fn: Callable[..., Any],
         optimizer: AdamW,
     ) -> None:
+        warnings.warn(
+            "FederatedServer is deprecated; use repro.federated.api.Federation "
+            "with recruitment/selection/aggregator policies instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.config = config
-        self.all_clients = {c.client_id: c for c in clients}
-        self.trainer = LocalTrainer(
-            loss_fn=loss_fn,
-            optimizer=optimizer,
-            batch_size=config.batch_size,
-            local_epochs=config.local_epochs,
-        )
-        self.cohort_trainer = CohortTrainer(
-            loss_fn=loss_fn,
-            optimizer=optimizer,
-            batch_size=config.batch_size,
-            local_epochs=config.local_epochs,
-            cohort_chunk=config.cohort_chunk,
-            mesh=config.mesh,
-            donate=config.donate_buffers,
-            staging=config.staging,
-            prefetch=config.prefetch,
-        )
+        self.federation = Federation(config.to_federation(), clients, loss_fn, optimizer)
+
+    @property
+    def all_clients(self):
+        return self.federation.all_clients
+
+    @property
+    def trainer(self):
+        return self.federation.trainer
+
+    @property
+    def cohort_trainer(self):
+        return self.federation.cohort_trainer
 
     def build_federation(self) -> tuple[np.ndarray, RecruitmentResult | None]:
         """Recruitment happens here — before the federation exists."""
-        all_ids = np.array(sorted(self.all_clients), dtype=np.int64)
-        if self.config.recruitment is None:
-            return all_ids, None
-        stats = [self.all_clients[i].stats() for i in all_ids]
-        result = recruit(stats, self.config.recruitment)
-        return np.sort(result.recruited_ids), result
+        return self.federation.build_federation()
 
     def run(
         self,
         init_params: PyTree,
         progress: Callable[[RoundRecord], None] | None = None,
     ) -> FederatedRunResult:
-        cfg = self.config
-        rng = np.random.default_rng(cfg.seed)
-        jax_rng = jax.random.key(cfg.seed)
-
-        federation_ids, recruitment = self.build_federation()
-        if cfg.engine == "vectorized" and cfg.staging == "resident":
-            # One host->device upload for the whole federation (only the
-            # recruited clients — unrecruited ones never ship anything);
-            # every round after this stages just an int32 index plan.
-            self.cohort_trainer.attach_device_cohort(
-                [self.all_clients[int(i)] for i in federation_ids]
-            )
-        params = init_params
-        history: list[RoundRecord] = []
-        # Pin the vectorized schedule's step axis to the federation-wide max
-        # so every round shares one compiled shape whatever mix is sampled.
-        federation_spe = cohort_steps_per_epoch(
-            [self.all_clients[int(i)].n_train for i in federation_ids], cfg.batch_size
-        )
-        t_start = time.perf_counter()
-
-        for rnd in range(cfg.rounds):
-            t_round = time.perf_counter()
-            participants = select_clients(
-                rng, federation_ids, fraction=cfg.participation_fraction
-            )
-            if cfg.engine == "vectorized":
-                cohort = [self.all_clients[int(cid)] for cid in participants]
-                # One jitted scan replaces the per-client split chain —
-                # bit-identical keys to the sequential loop, one dispatch.
-                jax_rng, key_data = chain_split_keys(jax_rng, len(participants))
-                params, per_losses, steps = self.cohort_trainer.train_cohort(
-                    params, cohort, rng, key_data, steps_per_epoch=federation_spe
-                )
-                losses = per_losses.tolist()
-            else:
-                client_params, weights, losses, steps = [], [], [], 0
-                for cid in participants:
-                    client = self.all_clients[int(cid)]
-                    jax_rng, sub = jax.random.split(jax_rng)
-                    new_params, loss, n_c = self.trainer.train_client(params, client, rng, sub)
-                    client_params.append(new_params)
-                    weights.append(n_c)
-                    losses.append(loss)
-                    steps += self.trainer.steps_per_round(client)
-                params = aggregate(client_params, weights)
-            record = RoundRecord(
-                round_index=rnd,
-                participant_ids=[int(c) for c in participants],
-                mean_local_loss=float(np.nanmean(losses)) if losses else float("nan"),
-                local_steps=steps,
-                comm_params=2 * len(participants),
-                wall_time_s=time.perf_counter() - t_round,
-            )
-            history.append(record)
-            if progress is not None:
-                progress(record)
-
-        return FederatedRunResult(
-            params=params,
-            history=history,
-            recruitment=recruitment,
-            federation_ids=federation_ids,
-            total_wall_time_s=time.perf_counter() - t_start,
-            total_local_steps=sum(r.local_steps for r in history),
-        )
+        return self.federation.run(init_params, progress=progress)

@@ -31,7 +31,11 @@ def test_selection_semantics():
     assert len(select_clients(rng, ids)) == 30
     sub = select_clients(rng, ids, fraction=0.1)
     assert len(sub) == 3 and len(set(sub.tolist())) == 3
-    assert len(select_clients(rng, ids, count=7)) == 7
+    # participants come back in sorted-id order — the cohort stacking order
+    # (an unsorted rng.choice draw would leak the draw order into records)
+    assert sub.tolist() == sorted(sub.tolist())
+    seven = select_clients(rng, ids, count=7)
+    assert len(seven) == 7 and seven.tolist() == sorted(seven.tolist())
     assert len(select_clients(rng, ids, fraction=0.001)) == 1  # at least one
     with pytest.raises(ValueError):
         select_clients(rng, ids, fraction=0.5, count=3)

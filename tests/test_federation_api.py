@@ -1,0 +1,427 @@
+"""The composable federation API: facade parity, registries, policies, shims.
+
+The acceptance bar: the ``Federation`` facade, driven purely by policy
+specs, reproduces the legacy ``FederatedServer`` results to 1e-5 across all
+five section-6 settings x both engines x both staging modes.  Around it:
+registry round-trips, unknown-policy errors, deprecation-shim warnings, the
+new policies' semantics (random-k / top-n / round-robin / loss-weighted /
+trimmed-mean / hierarchical), sorted participant order, and the real
+communication accounting that replaced ``comm_params``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.recruitment import BALANCED, QUALITY_GREEDY, RecruitmentConfig
+from repro.data.pipeline import ArrayDataset, ClientDataset
+from repro.federated import (
+    Federation,
+    FederationConfig,
+    FederatedConfig,
+    FederatedServer,
+    HierarchicalFedAvg,
+    LossWeightedSelection,
+    RecruitmentDecision,
+    RecruitmentPolicy,
+    RoundRobinSelection,
+    TrimmedMeanAggregator,
+    UniformSelection,
+    available_policies,
+    params_nbytes,
+    resolve_aggregator,
+    resolve_recruitment,
+    resolve_selection,
+    round_robin_clients,
+    select_clients,
+    trimmed_mean_stacked,
+)
+from repro.models.gru import GRUConfig, init_gru, make_loss_fn
+from repro.optim.adamw import AdamW
+
+SEQ_LEN, FEAT = 3, 5
+
+
+def make_clients(count, rng, lo=2, hi=18):
+    clients = []
+    for i, n in enumerate(rng.integers(lo, hi, count)):
+        x = rng.normal(size=(int(n), SEQ_LEN, FEAT)).astype(np.float32)
+        y = rng.uniform(0.5, 20.0, size=int(n)).astype(np.float32)
+        ds = ArrayDataset(x, y)
+        clients.append(ClientDataset(client_id=i, train=ds, val=ds))
+    return clients
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = GRUConfig(input_dim=FEAT, hidden_dim=2, num_layers=1)
+    clients = make_clients(10, np.random.default_rng(0))
+    return clients, make_loss_fn(cfg), init_gru(jax.random.key(1), cfg)
+
+
+def opt():
+    return AdamW(learning_rate=5e-3, weight_decay=5e-3)
+
+
+def assert_params_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol, rtol=0)
+
+
+# --------------------------------------------------------------------------
+# golden parity: policy combinations == legacy server, all settings/engines
+# --------------------------------------------------------------------------
+
+# Each section-6 setting as its (legacy kwargs, policy specs) pair.  The
+# recruitment gammas match experiments.paper.policies_for at gamma_th=0.1.
+SETTINGS = {
+    "ac": (
+        dict(participation_fraction=None, recruitment=None),
+        dict(recruitment="all", selection="uniform"),
+    ),
+    "sc": (
+        dict(participation_fraction=0.5, recruitment=None),
+        dict(recruitment="all", selection="uniform:0.5"),
+    ),
+    "arc": (
+        dict(participation_fraction=None, recruitment=BALANCED),
+        dict(recruitment="nu-greedy", selection="uniform"),
+    ),
+    "src": (
+        dict(participation_fraction=0.5, recruitment=BALANCED),
+        dict(recruitment="nu-greedy:0.5,0.5,0.1", selection="uniform:0.5"),
+    ),
+    "src-qg": (
+        dict(participation_fraction=0.5, recruitment=QUALITY_GREEDY),
+        dict(recruitment="nu-greedy:quality-greedy", selection="uniform:0.5"),
+    ),
+}
+
+
+@pytest.mark.parametrize("setting", sorted(SETTINGS))
+@pytest.mark.parametrize(
+    "engine,staging",
+    [
+        ("vectorized", "resident"),
+        ("vectorized", "rebuild"),
+        ("sequential", "resident"),
+        ("sequential", "rebuild"),
+    ],
+)
+def test_golden_parity_with_legacy_server(setup, setting, engine, staging):
+    clients, loss_fn, params0 = setup
+    legacy_kwargs, specs = SETTINGS[setting]
+    base = dict(rounds=2, local_epochs=1, batch_size=4, seed=0, engine=engine, staging=staging)
+    with pytest.warns(DeprecationWarning):
+        server = FederatedServer(
+            FederatedConfig(**base, **legacy_kwargs), clients, loss_fn, opt()
+        )
+    legacy = server.run(params0)
+    new = Federation(
+        FederationConfig(**base, **specs, aggregator="fedavg"), clients, loss_fn, opt()
+    ).run(params0)
+    assert legacy.federation_ids.tolist() == new.federation_ids.tolist()
+    for rl, rn in zip(legacy.history, new.history):
+        assert rl.participant_ids == rn.participant_ids
+    assert_params_close(legacy.params, new.params)
+    np.testing.assert_allclose(
+        [r.mean_local_loss for r in legacy.history],
+        [r.mean_local_loss for r in new.history],
+        atol=1e-5,
+    )
+
+
+def test_sorted_selection_engine_parity(setup):
+    """Satellite regression: participant ids are sorted (the cohort stacking
+    order) and vectorized/sequential stay in 1e-5 lockstep under sampling."""
+    clients, loss_fn, params0 = setup
+    outs = {}
+    for engine in ("sequential", "vectorized"):
+        outs[engine] = Federation(
+            FederationConfig(
+                rounds=3, local_epochs=1, batch_size=4, selection="uniform:0.5",
+                seed=11, engine=engine,
+            ),
+            clients, loss_fn, opt(),
+        ).run(params0)
+    for rs, rv in zip(outs["sequential"].history, outs["vectorized"].history):
+        assert rs.participant_ids == rv.participant_ids
+        assert rs.participant_ids == sorted(rs.participant_ids)
+        assert 1 < len(rs.participant_ids) < len(clients)  # sorting had work to do
+    assert_params_close(outs["sequential"].params, outs["vectorized"].params)
+
+
+def test_select_clients_returns_sorted_ids():
+    rng = np.random.default_rng(0)
+    ids = np.arange(40, 0, -1)  # descending input
+    full = select_clients(rng, ids)
+    assert full.tolist() == sorted(ids.tolist())
+    for _ in range(5):
+        sub = select_clients(rng, ids, fraction=0.3)
+        assert sub.tolist() == sorted(sub.tolist())
+
+
+# --------------------------------------------------------------------------
+# registries
+# --------------------------------------------------------------------------
+
+def test_registry_round_trips():
+    assert resolve_recruitment("nu-greedy").config == BALANCED
+    assert resolve_recruitment("nu-greedy:quality-greedy").config == QUALITY_GREEDY
+    assert resolve_recruitment("nu-greedy:1.0,0.01,0.2").config == RecruitmentConfig(
+        1.0, 0.01, 0.2
+    )
+    assert resolve_recruitment("random-k:7").k == 7
+    assert resolve_recruitment("top-n-samples:5").n == 5
+    assert resolve_selection("uniform:0.25").fraction == 0.25
+    assert resolve_selection("uniform:6").count == 6
+    assert resolve_selection("round-robin:3").count == 3
+    assert resolve_selection("loss-weighted:0.5").fraction == 0.5
+    assert resolve_aggregator("trimmed-mean:0.2").trim == 0.2
+    assert resolve_aggregator("hierarchical:4").num_regions == 4
+    # instances pass through untouched
+    sel = UniformSelection(fraction=0.1)
+    assert resolve_selection(sel) is sel
+    names = available_policies()
+    assert "nu-greedy" in names["recruitment"]
+    assert "round-robin" in names["selection"]
+    assert "hierarchical" in names["aggregator"]
+
+
+def test_selection_spec_validated_at_construction():
+    """Bad participation specs fail when the policy is built, not mid-run."""
+    with pytest.raises(ValueError, match="fraction"):
+        resolve_selection("loss-weighted:1.5")
+    with pytest.raises(ValueError, match="count"):
+        resolve_selection("round-robin:0")
+    with pytest.raises(ValueError, match="fraction"):
+        UniformSelection(fraction=0.0)
+    with pytest.raises(ValueError, match="not both"):
+        UniformSelection(fraction=0.5, count=3)
+
+
+def test_unknown_policy_error_messages():
+    with pytest.raises(ValueError, match="unknown recruitment policy 'warp'"):
+        resolve_recruitment("warp")
+    with pytest.raises(ValueError, match="unknown selection.*uniform"):
+        resolve_selection("bogus")
+    with pytest.raises(ValueError, match="unknown aggregator.*fedavg"):
+        resolve_aggregator("median")
+    with pytest.raises(TypeError, match="aggregator"):
+        resolve_aggregator(42)
+
+
+def test_deprecation_shim_warns_and_maps(setup):
+    clients, loss_fn, _ = setup
+    cfg = FederatedConfig(rounds=1, participation_fraction=0.1, recruitment=BALANCED)
+    with pytest.warns(DeprecationWarning, match="Federation"):
+        server = FederatedServer(cfg, clients, loss_fn, opt())
+    fed_cfg = cfg.to_federation()
+    assert fed_cfg.recruitment.config == BALANCED
+    assert fed_cfg.selection.fraction == 0.1
+    assert fed_cfg.aggregator == "fedavg"
+    # legacy surface still reachable through the shim
+    ids, rec = server.build_federation()
+    assert rec is not None and 0 < len(ids) <= len(clients)
+    assert server.cohort_trainer is server.federation.cohort_trainer
+
+
+# --------------------------------------------------------------------------
+# recruitment policies
+# --------------------------------------------------------------------------
+
+def test_recruitment_baselines(setup):
+    clients, loss_fn, _ = setup
+    stats = [c.stats() for c in clients]
+    rng = np.random.default_rng(0)
+    all_ids = sorted(c.client_id for c in clients)
+    assert resolve_recruitment("all").recruit(stats, rng).federation_ids.tolist() == all_ids
+    picked = resolve_recruitment("random-k:4").recruit(stats, rng).federation_ids
+    assert len(picked) == 4 and picked.tolist() == sorted(set(picked.tolist()))
+    top = resolve_recruitment("top-n-samples:3").recruit(stats, rng).federation_ids
+    sizes = {c.client_id: c.n_train for c in clients}
+    cut = sorted(sizes.values(), reverse=True)[2]
+    assert all(sizes[int(i)] >= cut for i in top) and len(top) == 3
+    # k larger than the cohort degrades to everyone
+    assert len(resolve_recruitment("random-k:99").recruit(stats, rng).federation_ids) == len(
+        clients
+    )
+
+
+def test_custom_recruitment_policy_instance(setup):
+    """A user-defined policy passed as an instance, no registration needed."""
+    clients, loss_fn, params0 = setup
+
+    class EvenIdsOnly(RecruitmentPolicy):
+        def recruit(self, stats, rng):
+            ids = np.array(sorted(s.client_id for s in stats if s.client_id % 2 == 0))
+            return RecruitmentDecision(federation_ids=ids)
+
+    out = Federation(
+        FederationConfig(rounds=1, local_epochs=1, batch_size=4, recruitment=EvenIdsOnly()),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert all(int(i) % 2 == 0 for i in out.federation_ids)
+
+
+def test_recruitment_validation(setup):
+    clients, loss_fn, _ = setup
+
+    class Liar(RecruitmentPolicy):
+        def recruit(self, stats, rng):
+            return RecruitmentDecision(federation_ids=np.array([999]))
+
+    fed = Federation(
+        FederationConfig(recruitment=Liar()), clients, loss_fn, opt()
+    )
+    with pytest.raises(ValueError, match="unknown client ids"):
+        fed.build_federation()
+
+
+# --------------------------------------------------------------------------
+# selection policies
+# --------------------------------------------------------------------------
+
+def test_round_robin_covers_everyone_deterministically():
+    ids = np.arange(10, 0, -1)  # unsorted on purpose
+    rng = np.random.default_rng(0)
+    state_before = rng.bit_generator.state
+    seen = []
+    sel = RoundRobinSelection(count=3)
+    for rnd in range(4):
+        picked = sel.select(rnd, ids, rng)
+        assert picked.tolist() == sorted(picked.tolist()) and len(picked) == 3
+        seen.extend(picked.tolist())
+    assert set(seen) == set(ids.tolist())        # full coverage in ceil(10/3) rounds
+    assert rng.bit_generator.state == state_before  # consumed no RNG at all
+    # pure-function form agrees
+    np.testing.assert_array_equal(
+        round_robin_clients(1, ids, 3), sel.select(1, ids, np.random.default_rng(9))
+    )
+
+
+def test_loss_weighted_prefers_lossy_clients():
+    ids = np.arange(6)
+    sel = LossWeightedSelection(count=2)
+    rng = np.random.default_rng(0)
+    # before any observation: uniform — every client reachable
+    first = sel.select(0, ids, rng)
+    assert len(first) == 2
+    sel.observe(ids, np.array([0.01, 0.01, 0.01, 0.01, 0.01, 50.0]))
+    hits = sum(5 in sel.select(r, ids, rng).tolist() for r in range(40))
+    assert hits >= 35  # ~uniform would give ~13/40
+    # NaN losses (clients that ran no steps) must not poison the weights
+    sel.observe(ids[:1], np.array([np.nan]))
+    assert len(sel.select(0, ids, rng)) == 2
+
+
+def test_selection_must_stay_inside_federation(setup):
+    clients, loss_fn, params0 = setup
+
+    class Rogue(UniformSelection):
+        def select(self, round_index, federation_ids, rng):
+            return np.array([0, 999])
+
+    fed = Federation(
+        FederationConfig(rounds=1, selection=Rogue()), clients, loss_fn, opt()
+    )
+    with pytest.raises(ValueError, match="sorted subset"):
+        fed.run(params0)
+
+
+# --------------------------------------------------------------------------
+# aggregators
+# --------------------------------------------------------------------------
+
+def test_trimmed_mean_stacked_semantics():
+    rng = np.random.default_rng(0)
+    stacked = {"w": rng.normal(size=(10, 4, 3)).astype(np.float32)}
+    # trim=0 == plain coordinate mean
+    np.testing.assert_allclose(
+        np.asarray(trimmed_mean_stacked(stacked, 0.0)["w"]),
+        stacked["w"].mean(axis=0),
+        atol=1e-6,
+    )
+    # a hijacked client cannot move the trimmed mean far
+    poisoned = {"w": stacked["w"].copy()}
+    poisoned["w"][3] = 1e6
+    clean_mean = np.delete(stacked["w"], 3, axis=0).mean(axis=0)
+    robust = np.asarray(trimmed_mean_stacked(poisoned, 0.2)["w"])
+    assert float(np.max(np.abs(robust - clean_mean))) < 1.0
+    plain = np.asarray(trimmed_mean_stacked(poisoned, 0.0)["w"])
+    assert float(np.max(np.abs(plain))) > 1e4  # untrimmed it blows up
+    with pytest.raises(ValueError, match="trim"):
+        trimmed_mean_stacked(stacked, 0.5)
+
+
+def test_trimmed_mean_federation_runs(setup):
+    clients, loss_fn, params0 = setup
+    out = Federation(
+        FederationConfig(
+            rounds=2, local_epochs=1, batch_size=4, aggregator=TrimmedMeanAggregator(0.2),
+            selection="uniform", seed=0,
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert len(out.history) == 2
+    assert all(np.isfinite(r.mean_local_loss) for r in out.history)
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "sequential"])
+def test_hierarchical_matches_flat_fedavg(setup, engine):
+    """Two-level FedAvg telescopes to flat FedAvg: contiguous regional
+    groups consume the RNG stream in the same client-major order, so the
+    only difference is the (associativity of the) weighted mean — 1e-5."""
+    clients, loss_fn, params0 = setup
+    base = dict(rounds=2, local_epochs=1, batch_size=4, seed=0, engine=engine)
+    flat = Federation(
+        FederationConfig(**base, aggregator="fedavg"), clients, loss_fn, opt()
+    ).run(params0)
+    hier = Federation(
+        FederationConfig(**base, aggregator="hierarchical:3"), clients, loss_fn, opt()
+    ).run(params0)
+    assert_params_close(flat.params, hier.params)
+    np.testing.assert_allclose(
+        [r.mean_local_loss for r in flat.history],
+        [r.mean_local_loss for r in hier.history],
+        atol=1e-5,
+    )
+
+
+def test_hierarchical_groups_partition():
+    agg = HierarchicalFedAvg(num_regions=3)
+    ids = np.arange(10)
+    groups = agg.groups(ids)
+    assert len(groups) == 3
+    np.testing.assert_array_equal(np.concatenate(groups), ids)
+    # more regions than participants degrades to singleton groups
+    assert len(HierarchicalFedAvg(num_regions=8).groups(np.arange(3))) == 3
+
+
+# --------------------------------------------------------------------------
+# communication accounting
+# --------------------------------------------------------------------------
+
+def test_round_record_comm_accounting(setup):
+    clients, loss_fn, params0 = setup
+    n_tensors = len(jax.tree.leaves(params0))
+    nbytes = params_nbytes(params0)
+    out = Federation(
+        FederationConfig(rounds=2, local_epochs=1, batch_size=4, selection="uniform:0.5"),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    for r in out.history:
+        k = len(r.participant_ids)
+        assert r.params_down == k * n_tensors
+        assert r.params_up == k * n_tensors
+        assert r.bytes_transferred == 2 * k * nbytes
+    summary = out.summary()
+    assert summary["params_down"] == sum(r.params_down for r in out.history)
+    assert summary["params_up"] == sum(r.params_up for r in out.history)
+    assert summary["bytes_transferred"] == sum(r.bytes_transferred for r in out.history)
+    # fewer participants -> fewer bytes: the recruitment claim in comm terms
+    small = Federation(
+        FederationConfig(rounds=2, local_epochs=1, batch_size=4, selection="uniform:2"),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert small.summary()["bytes_transferred"] < summary["bytes_transferred"]
