@@ -292,6 +292,61 @@ def bench_pipeline(
 
 
 # --------------------------------------------------------------------------
+# async runtime: simulated time-to-target under straggler distributions
+# --------------------------------------------------------------------------
+
+def bench_async(
+    flushes: int = 8,
+    cohort_scale: float = 0.05,
+    dropout: float = 0.05,
+    out_path: str = "BENCH_async.json",
+) -> None:
+    """Recruited vs all-clients async federations on the virtual clock.
+
+    Runs the ``repro.federated.runtime`` event-driven federation (fedbuff
+    buffered aggregation, per-client straggler latencies, dropout) for both
+    the ``"all"`` and nu-greedy federations under each latency model, and
+    reports the paper's claim on the axis the sync engines cannot measure:
+    simulated time-to-target-loss.  Rows quote virtual (simulated) seconds
+    scaled to us; ``derived`` carries the recruited-over-all speedup and
+    the mean update staleness.  Writes ``BENCH_async.json``.
+    """
+    from repro.experiments.paper import ASYNC_FEDERATIONS, run_async_comparison
+
+    report = run_async_comparison(
+        flushes=flushes, cohort_scale=cohort_scale, dropout=dropout
+    )
+    for latency, row in report["latency"].items():
+        tag = latency.replace(":", "")
+        for name, _ in ASYNC_FEDERATIONS:
+            entry = row[name]
+            reached = entry["time_to_target"]
+            stale = entry["mean_staleness"]
+            emit(
+                f"async_{tag}_{name}",
+                1e6 * reached if reached is not None else 0.0,
+                ("virtual_s" if reached is not None else "target_unreached")
+                + f";fed={entry['federation_size']}"
+                + (f";stale={stale:.2f}" if stale is not None else "")
+                + f";dropped={entry['dropped']}",
+            )
+        speedup = row["recruited_speedup"]
+        t_rec = row["recruited"]["time_to_target"]
+        emit(
+            f"async_{tag}_speedup",
+            1e6 * t_rec if t_rec is not None else 0.0,
+            (
+                f"recruited_speedup={speedup:.2f}x"
+                if speedup is not None
+                else "recruited_speedup=n/a"
+            )
+            + f";target_loss={row['target_loss']:.4f}",
+        )
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}", flush=True)
+
+
+# --------------------------------------------------------------------------
 # kernels
 # --------------------------------------------------------------------------
 
@@ -366,11 +421,13 @@ def main() -> None:
     ap.add_argument("--skip-paper", action="store_true")
     ap.add_argument(
         "--mode",
-        choices=["all", "cohort", "kernels", "paper", "paper189", "pipeline"],
+        choices=["all", "cohort", "kernels", "paper", "paper189", "pipeline", "async"],
         default="all",
         help="'cohort' times sequential vs vectorized federated rounds only; "
         "'paper189' runs the full five-setting grid at 189 clients; "
-        "'pipeline' compares rebuild-per-round vs device-resident staging",
+        "'pipeline' compares rebuild-per-round vs device-resident staging; "
+        "'async' simulates recruited vs all-clients time-to-target-loss "
+        "under straggler latency models",
     )
     ap.add_argument("--cohort-clients", type=int, nargs="+", default=[8, 32, 128])
     ap.add_argument("--paper189-rounds", type=int, default=3)
@@ -381,6 +438,18 @@ def main() -> None:
         "--pipeline-chunk", type=int, default=48,
         help="pipeline: clients per vmapped call (4 chunks at 189 clients, "
         "so the double-buffered plan prefetch has chunks to overlap)",
+    )
+    ap.add_argument(
+        "--async-flushes", type=int, default=8,
+        help="async: buffered-aggregation flush budget per federation",
+    )
+    ap.add_argument(
+        "--async-scale", type=float, default=0.05,
+        help="async: cohort scale (heterogeneous synthetic eICU population)",
+    )
+    ap.add_argument(
+        "--async-dropout", type=float, default=0.05,
+        help="async: per-dispatch client dropout probability",
     )
     ap.add_argument(
         "--mesh-auto", action="store_true",
@@ -404,6 +473,14 @@ def main() -> None:
             total_stays=args.pipeline_stays,
             cohort_chunk=args.pipeline_chunk,
             mesh_auto=args.mesh_auto,
+        )
+        print(f"# total benchmark time: {time.time()-t0:.1f}s")
+        return
+    if args.mode == "async":
+        bench_async(
+            flushes=args.async_flushes,
+            cohort_scale=args.async_scale,
+            dropout=args.async_dropout,
         )
         print(f"# total benchmark time: {time.time()-t0:.1f}s")
         return

@@ -68,6 +68,35 @@ This driver accepts the same engine controls (``--engine``,
 ``--cohort-chunk``, ``--mesh auto``, ``--no-donate``, ``--staging``,
 ``--no-prefetch``) plus the policy overrides (``--selection``,
 ``--aggregator``) for one-off runs.
+
+Async federation & straggler simulation
+---------------------------------------
+The paper's headline is a *training time* claim, and in a real deployment
+the dominant cost is waiting for slow or flaky ICUs — which a synchronous
+round barrier can't express.  ``repro.federated.runtime`` adds an
+event-driven twin of the facade: a deterministic virtual-clock scheduler
+dispatches client tasks under pluggable per-client latency and dropout
+models (``latency="constant" | "lognormal:0.5" | "pareto:1.5" | "trace"``,
+``dropout="bernoulli:0.1"`` — same registry grammar as the policies), and
+buffered aggregators fold completions into new parameter versions with
+polynomial staleness-decay weights::
+
+    AsyncFederationConfig(recruitment="nu-greedy",
+                          aggregator="fedbuff:16",        # flush every 16 updates
+                          latency="pareto:1.2",           # heavy-tailed stragglers
+                          dropout=0.05)
+    AsyncFederation(cfg, clients, loss_fn, opt).run(params)
+
+``"fedbuff:K"`` is buffered async FedAvg (K = all participants + zero
+latency spread reproduces synchronous FedAvg to 1e-5 — the tier-1 parity
+gate); ``"hierarchical-async:R"`` promotes the sync ``"hierarchical:R"``
+aggregator to stale-tolerant cross-pod combines (regions merge whenever
+they finish).  Each task still runs through the unchanged jitted /
+donated / shard_map cohort engine — the runtime only reorders which cohort
+chunks train against which parameter version.  Flush records carry
+``virtual_time`` / ``staleness``, so recruited-vs-all federations compare
+on *simulated time-to-target-loss*: see ``examples/async_federation.py``
+and ``python benchmarks/run.py --mode async`` (-> ``BENCH_async.json``).
 """
 
 import argparse

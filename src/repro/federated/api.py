@@ -63,6 +63,7 @@ shims in ``repro.federated.server`` that map onto these policies.
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import time
 from typing import Any, Callable, Sequence
 
@@ -215,7 +216,11 @@ def _resolve(registry: dict, spec, kind: str, base: type):
     name, _, rest = spec.partition(":")
     if name not in registry:
         known = ", ".join(sorted(registry))
-        raise ValueError(f"unknown {kind} policy {name!r}; choose from: {known}")
+        close = difflib.get_close_matches(name, registry, n=1)
+        hint = f"; did you mean {close[0]!r}?" if close else ""
+        raise ValueError(
+            f"unknown {kind} policy {name!r}{hint}; choose from: {known}"
+        )
     args = [_parse_arg(t) for t in rest.split(",")] if rest else []
     return registry[name](*args)
 
@@ -523,6 +528,17 @@ class RoundRecord:
     params_up: int                   # parameter tensors returned clients -> server
     bytes_transferred: int           # down + up, from the param pytree's real sizes
     wall_time_s: float
+    # Async-runtime extras (None on synchronous rounds): the virtual-clock
+    # time the flush happened at, and the mean staleness (in parameter
+    # versions) of the updates folded into it.
+    virtual_time: float | None = None
+    staleness: float | None = None
+
+    @property
+    def round_time_s(self) -> float:
+        """Host wall-clock this round took — the timing field's public name
+        (``wall_time_s`` kept for compatibility with existing reports)."""
+        return self.wall_time_s
 
 
 @dataclasses.dataclass
@@ -535,15 +551,34 @@ class FederatedRunResult:
     total_local_steps: int
 
     def summary(self) -> dict[str, Any]:
+        # Async-runtime totals: the simulated clock at the last flush and
+        # the mean update staleness — None on synchronous runs, where no
+        # record carries a virtual time.
+        async_records = [r for r in self.history if r.virtual_time is not None]
         return {
             "rounds": len(self.history),
             "federation_size": int(self.federation_ids.size),
             "recruited": None if self.recruitment is None else self.recruitment.num_recruited,
             "total_wall_time_s": self.total_wall_time_s,
+            "total_round_time_s": sum(r.round_time_s for r in self.history),
             "total_local_steps": self.total_local_steps,
             "params_down": sum(r.params_down for r in self.history),
             "params_up": sum(r.params_up for r in self.history),
             "bytes_transferred": sum(r.bytes_transferred for r in self.history),
+            "virtual_time": max(r.virtual_time for r in async_records)
+            if async_records
+            else None,
+            # Weight each flush by its participant count so the figure
+            # reads as mean staleness per *update*, not per flush — a
+            # one-update forced flush must not count like a full buffer.
+            "mean_staleness": float(
+                np.average(
+                    [r.staleness for r in async_records],
+                    weights=[max(len(r.participant_ids), 1) for r in async_records],
+                )
+            )
+            if async_records
+            else None,
         }
 
 
@@ -602,6 +637,13 @@ class Federation:
         self.recruitment_policy = resolve_recruitment(config.recruitment)
         self.selection_policy = resolve_selection(config.selection)
         self.aggregator = resolve_aggregator(config.aggregator)
+        if self.aggregator.mode == "buffered":
+            raise ValueError(
+                f"aggregator {config.aggregator!r} is asynchronous "
+                "(mode='buffered'); run it with "
+                "repro.federated.runtime.AsyncFederation instead of the "
+                "synchronous Federation"
+            )
         if self.aggregator.mode not in AGGREGATION_MODES:
             raise ValueError(
                 f"aggregator mode {self.aggregator.mode!r} not in {AGGREGATION_MODES}"

@@ -1,0 +1,63 @@
+"""Async federation runtime: virtual-clock scheduling, stragglers, staleness.
+
+Importing this package registers the buffered aggregators (``"fedbuff:K"``,
+``"hierarchical-async:R"``) into the shared aggregator registry and exposes
+the latency/dropout model registries (``"constant"``, ``"lognormal:0.5"``,
+``"pareto:1.5"``, ``"trace"``, ``"bernoulli:0.1"``).  The entry point is
+:class:`AsyncFederation` driven by an :class:`AsyncFederationConfig`.
+"""
+
+from repro.federated.runtime.async_federation import (
+    AsyncFederation,
+    AsyncFederationConfig,
+)
+from repro.federated.runtime.latency import (
+    BernoulliDropout,
+    ConstantLatency,
+    DropoutModel,
+    LatencyModel,
+    LognormalLatency,
+    NeverDropout,
+    ParetoLatency,
+    TraceLatency,
+    available_runtime_models,
+    register_dropout,
+    register_latency,
+    resolve_dropout,
+    resolve_latency,
+)
+from repro.federated.runtime.scheduler import Event, VirtualScheduler
+from repro.federated.runtime.staleness import (
+    AsyncAggregator,
+    AsyncUpdate,
+    FedBuffAggregator,
+    HierarchicalAsyncAggregator,
+    polynomial_staleness_weight,
+    staleness_weights,
+)
+
+__all__ = [
+    "AsyncFederation",
+    "AsyncFederationConfig",
+    "AsyncAggregator",
+    "AsyncUpdate",
+    "FedBuffAggregator",
+    "HierarchicalAsyncAggregator",
+    "polynomial_staleness_weight",
+    "staleness_weights",
+    "Event",
+    "VirtualScheduler",
+    "LatencyModel",
+    "DropoutModel",
+    "ConstantLatency",
+    "LognormalLatency",
+    "ParetoLatency",
+    "TraceLatency",
+    "NeverDropout",
+    "BernoulliDropout",
+    "available_runtime_models",
+    "register_latency",
+    "register_dropout",
+    "resolve_latency",
+    "resolve_dropout",
+]

@@ -1,0 +1,690 @@
+"""The async federation runtime: scheduler, latency/staleness, parity, replay.
+
+The acceptance bar: ``"fedbuff:K"`` with K = all participants and a
+zero-spread latency model reproduces synchronous flat FedAvg to 1e-5
+across both engines and both staging modes (the parity gate), and seeded
+runs replay bit-identically.  Around it: virtual-clock event ordering,
+latency/dropout registry round-trips with did-you-mean suggestions,
+property tests for the polynomial staleness weights, straggler/dropout
+semantics, and the new RoundRecord timing fields.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import ArrayDataset, ClientDataset
+from repro.federated import (
+    AsyncFederation,
+    AsyncFederationConfig,
+    Federation,
+    FederationConfig,
+    available_runtime_models,
+    chain_split_keys,
+    polynomial_staleness_weight,
+    resolve_aggregator,
+    resolve_dropout,
+    resolve_latency,
+    resolve_recruitment,
+    staleness_weights,
+)
+from repro.federated.runtime import (
+    AsyncAggregator,
+    BernoulliDropout,
+    FedBuffAggregator,
+    HierarchicalAsyncAggregator,
+    LognormalLatency,
+    VirtualScheduler,
+)
+from repro.models.gru import GRUConfig, init_gru, make_loss_fn
+from repro.optim.adamw import AdamW
+
+SEQ_LEN, FEAT = 3, 5
+
+
+def make_clients(count, rng, lo=2, hi=18):
+    clients = []
+    for i, n in enumerate(rng.integers(lo, hi, count)):
+        x = rng.normal(size=(int(n), SEQ_LEN, FEAT)).astype(np.float32)
+        y = rng.uniform(0.5, 20.0, size=int(n)).astype(np.float32)
+        ds = ArrayDataset(x, y)
+        clients.append(ClientDataset(client_id=i, train=ds, val=ds))
+    return clients
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = GRUConfig(input_dim=FEAT, hidden_dim=2, num_layers=1)
+    clients = make_clients(10, np.random.default_rng(0))
+    return clients, make_loss_fn(cfg), init_gru(jax.random.key(1), cfg)
+
+
+def opt():
+    return AdamW(learning_rate=5e-3, weight_decay=5e-3)
+
+
+def assert_params_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol, rtol=0)
+
+
+# --------------------------------------------------------------------------
+# virtual-clock scheduler
+# --------------------------------------------------------------------------
+
+def test_scheduler_orders_by_time_then_seq():
+    sched = VirtualScheduler(seed=0)
+    sched.schedule(2.0, "b")
+    sched.schedule(1.0, "a")
+    sched.schedule(2.0, "c")       # same time as "b", scheduled later
+    sched.schedule(1.0, "a2")
+    order = [sched.pop().kind for _ in range(4)]
+    assert order == ["a", "a2", "b", "c"]  # time first, insertion seq on ties
+    assert sched.now == 2.0
+    assert sched.processed == 4
+    assert sched.empty
+
+
+def test_scheduler_clock_never_runs_backwards():
+    sched = VirtualScheduler(seed=0)
+    sched.schedule(5.0, "x")
+    sched.pop()
+    with pytest.raises(ValueError, match="past"):
+        sched.schedule(4.0, "late")
+    with pytest.raises(ValueError, match="delay"):
+        sched.after(-1.0, "neg")
+    with pytest.raises(ValueError, match="finite"):
+        sched.schedule(float("nan"), "nan")
+    with pytest.raises(IndexError):
+        sched.pop()
+    # scheduling exactly at "now" is allowed (flush-at-event-boundary)
+    ev = sched.schedule(5.0, "now")
+    assert ev.time == 5.0 and sched.pop().kind == "now"
+
+
+def test_scheduler_replays_identically():
+    def drive(seed):
+        sched = VirtualScheduler(seed=seed)
+        trace = []
+        for i in range(5):
+            sched.after(float(sched.rng.exponential()), f"e{i}")
+        while not sched.empty:
+            ev = sched.pop()
+            trace.append((ev.time, ev.seq, ev.kind))
+        return trace
+
+    assert drive(7) == drive(7)
+    assert drive(7) != drive(8)  # and the seed actually matters
+
+
+# --------------------------------------------------------------------------
+# latency / dropout registries
+# --------------------------------------------------------------------------
+
+def test_latency_registry_round_trips():
+    assert resolve_latency("constant").seconds == 1.0
+    assert resolve_latency("constant:2.5").seconds == 2.5
+    assert resolve_latency("lognormal:0.7").sigma == 0.7
+    assert resolve_latency("lognormal:0.7,2.0").median == 2.0
+    assert resolve_latency("pareto:1.1").alpha == 1.1
+    assert resolve_latency("trace:0.02,0.5").per_sample == 0.02
+    model = LognormalLatency(sigma=0.3)
+    assert resolve_latency(model) is model
+    names = available_runtime_models()
+    assert set(names["latency"]) >= {"constant", "lognormal", "pareto", "trace"}
+    assert set(names["dropout"]) >= {"never", "bernoulli"}
+
+
+def test_latency_model_validation():
+    with pytest.raises(ValueError, match="seconds"):
+        resolve_latency("constant:0")
+    with pytest.raises(ValueError, match="sigma"):
+        resolve_latency("lognormal:-1")
+    with pytest.raises(ValueError, match="alpha"):
+        resolve_latency("pareto:0")
+    with pytest.raises(ValueError, match="per_sample"):
+        resolve_latency("trace:-0.1")
+    with pytest.raises(ValueError, match="probability"):
+        resolve_dropout("bernoulli:1.5")
+
+
+def test_latency_semantics():
+    rng = np.random.default_rng(0)
+    const = resolve_latency("constant:3.0")
+    assert const.zero_spread
+    assert const.sample(0, 100, rng) == const.sample(1, 5, rng) == 3.0
+    # trace: deterministic, proportional to the client's local sample count
+    trace = resolve_latency("trace:0.1,1.0")
+    assert trace.sample(0, 10, rng) == pytest.approx(2.0)
+    assert trace.sample(0, 40, rng) == pytest.approx(5.0)
+    # persistent rates: a client's speed is stable across dispatches
+    slowfast = resolve_latency("pareto:1.5")
+    first = [slowfast.sample(c, 10, rng) for c in range(20)]
+    again = [slowfast.sample(c, 10, rng) for c in range(20)]
+    assert first == again
+    assert len(set(first)) > 1  # and there is real spread across clients
+    # lognormal:0 degenerates to the constant model
+    assert resolve_latency("lognormal:0.0").zero_spread
+
+
+def test_dropout_models():
+    rng = np.random.default_rng(0)
+    assert not resolve_dropout("never").drops(0, rng)
+    always = resolve_dropout("bernoulli:1.0")
+    assert all(always.drops(c, rng) for c in range(10))
+    # bare float shorthand
+    half = resolve_dropout(0.5)
+    assert isinstance(half, BernoulliDropout) and half.p == 0.5
+    hits = sum(half.drops(0, rng) for _ in range(400))
+    assert 120 < hits < 280
+
+
+def test_unknown_spec_gets_did_you_mean_suggestion():
+    """Satellite: registry errors suggest the nearest known spec name."""
+    with pytest.raises(ValueError, match="did you mean 'nu-greedy'"):
+        resolve_recruitment("nugreedy")
+    with pytest.raises(ValueError, match="did you mean 'lognormal'"):
+        resolve_latency("lognormel:0.5")
+    with pytest.raises(ValueError, match="did you mean 'fedbuff'"):
+        resolve_aggregator("fedbuf:8")
+    # no near-miss: no suggestion, but the known names still print
+    with pytest.raises(ValueError, match=r"unknown latency policy 'xyzzy'; choose"):
+        resolve_latency("xyzzy")
+
+
+# --------------------------------------------------------------------------
+# staleness weights (property tests)
+# --------------------------------------------------------------------------
+
+@given(
+    s=st.floats(min_value=0.0, max_value=50.0),
+    a=st.floats(min_value=0.0, max_value=4.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_polynomial_weight_properties(s, a):
+    w = polynomial_staleness_weight(s, a)
+    assert 0.0 < w <= 1.0
+    assert polynomial_staleness_weight(0.0, a) == 1.0
+    # monotone non-increasing in staleness
+    assert polynomial_staleness_weight(s + 1.0, a) <= w
+    # exponent 0 disables the discount entirely
+    assert polynomial_staleness_weight(s, 0.0) == 1.0
+
+
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=500), min_size=1, max_size=12),
+    a=st.floats(min_value=0.0, max_value=3.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_staleness_weights_normalize(sizes, a):
+    stale = [i % 5 for i in range(len(sizes))]
+    w = staleness_weights(sizes, stale, a)
+    assert w.shape == (len(sizes),)
+    assert np.all(w > 0)
+    assert np.isclose(w.sum(), 1.0)
+    # zero staleness everywhere reduces to plain sample weighting
+    flat = staleness_weights(sizes, np.zeros(len(sizes)), a)
+    np.testing.assert_allclose(flat, np.asarray(sizes) / np.sum(sizes))
+
+
+def test_staleness_validation():
+    with pytest.raises(ValueError, match="exponent"):
+        polynomial_staleness_weight(1.0, -0.5)
+    with pytest.raises(ValueError, match="staleness"):
+        polynomial_staleness_weight(-1.0, 0.5)
+    with pytest.raises(ValueError, match="sample sizes"):
+        staleness_weights([0, 0], [0, 0], 0.5)
+
+
+# --------------------------------------------------------------------------
+# the parity gate: fedbuff at full buffer + zero spread == sync FedAvg
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "engine,staging",
+    [
+        ("vectorized", "resident"),
+        ("vectorized", "rebuild"),
+        ("sequential", "resident"),
+        ("sequential", "rebuild"),
+    ],
+)
+def test_fedbuff_full_buffer_matches_sync_fedavg(setup, engine, staging):
+    """K = all participants + zero latency spread: every update has
+    staleness 0 and anchors at the current params, so each flush *is* a
+    flat FedAvg round — 1e-5 against the synchronous facade, both engines,
+    both staging modes."""
+    clients, loss_fn, params0 = setup
+    base = dict(rounds=2, local_epochs=1, batch_size=4, seed=0, engine=engine, staging=staging)
+    sync = Federation(
+        FederationConfig(**base, recruitment="all", selection="uniform", aggregator="fedavg"),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    asyn = AsyncFederation(
+        AsyncFederationConfig(
+            **base, recruitment="all", aggregator=f"fedbuff:{len(clients)}",
+            latency="constant",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert sync.federation_ids.tolist() == asyn.federation_ids.tolist()
+    for rs, ra in zip(sync.history, asyn.history):
+        assert rs.participant_ids == ra.participant_ids
+        assert ra.staleness == 0.0
+    assert_params_close(sync.params, asyn.params)
+    np.testing.assert_allclose(
+        [r.mean_local_loss for r in sync.history],
+        [r.mean_local_loss for r in asyn.history],
+        atol=1e-5,
+    )
+
+
+def test_fedbuff_parity_under_auto_mesh(setup):
+    """The parity gate through the shard_map client axis: under CI's
+    4-host-device leg every singleton task pads to the mesh width and
+    reduces through the cross-shard psum; on one device 'auto' degenerates
+    to plain vmap — same numbers either way."""
+    clients, loss_fn, params0 = setup
+    base = dict(rounds=2, local_epochs=1, batch_size=4, seed=0, engine="vectorized")
+    sync = Federation(
+        FederationConfig(**base, aggregator="fedavg", mesh="auto"),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    asyn = AsyncFederation(
+        AsyncFederationConfig(
+            **base, aggregator=f"fedbuff:{len(clients)}", latency="constant",
+            mesh="auto",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert_params_close(sync.params, asyn.params)
+
+
+def test_chain_split_singletons_match_batched_chain():
+    """The key-stream argument under the parity gate: n chained 1-splits
+    are bitwise the one n-split chain the sync vectorized round draws."""
+    key = jax.random.key(0)
+    _, batched = chain_split_keys(key, 6)
+    singles, k = [], key
+    for _ in range(6):
+        k, sub = chain_split_keys(k, 1)
+        singles.append(np.asarray(sub[0]))
+    np.testing.assert_array_equal(np.stack(singles), np.asarray(batched))
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "sequential"])
+def test_hierarchical_async_single_region_matches_sync(setup, engine):
+    """R = 1: the whole federation is one region, each combine lands a
+    full-weight, zero-staleness regional FedAvg — synchronous flat FedAvg
+    on the event loop."""
+    clients, loss_fn, params0 = setup
+    base = dict(rounds=2, local_epochs=1, batch_size=4, seed=0, engine=engine)
+    sync = Federation(
+        FederationConfig(**base, aggregator="fedavg"), clients, loss_fn, opt()
+    ).run(params0)
+    asyn = AsyncFederation(
+        AsyncFederationConfig(**base, aggregator="hierarchical-async:1", latency="constant"),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert_params_close(sync.params, asyn.params)
+    np.testing.assert_allclose(
+        [r.mean_local_loss for r in sync.history],
+        [r.mean_local_loss for r in asyn.history],
+        atol=1e-5,
+    )
+
+
+# --------------------------------------------------------------------------
+# seeded replay determinism
+# --------------------------------------------------------------------------
+
+def test_seeded_replay_is_bit_identical(setup):
+    """Same seed -> same timeline, same flushes, same parameters, bitwise —
+    the property that makes the simulator a controlled instrument."""
+    clients, loss_fn, params0 = setup
+
+    def run():
+        fed = AsyncFederation(
+            AsyncFederationConfig(
+                rounds=4, local_epochs=1, batch_size=4, seed=3,
+                aggregator="fedbuff:3,0.5", latency="pareto:1.2", dropout=0.2,
+            ),
+            clients, loss_fn, opt(),
+        )
+        out = fed.run(params0)
+        return fed, out
+
+    fed1, out1 = run()
+    fed2, out2 = run()
+    assert [
+        (r.virtual_time, r.participant_ids, r.staleness, r.mean_local_loss)
+        for r in out1.history
+    ] == [
+        (r.virtual_time, r.participant_ids, r.staleness, r.mean_local_loss)
+        for r in out2.history
+    ]
+    for a, b in zip(jax.tree.leaves(out1.params), jax.tree.leaves(out2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    s1, s2 = fed1.last_run_stats, fed2.last_run_stats
+    assert s1 == s2
+    assert s1["dropped"] > 0  # the scenario actually exercised dropout
+    # a different seed produces a genuinely different timeline
+    fed3 = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=4, local_epochs=1, batch_size=4, seed=4,
+            aggregator="fedbuff:3,0.5", latency="pareto:1.2", dropout=0.2,
+        ),
+        clients, loss_fn, opt(),
+    )
+    out3 = fed3.run(params0)
+    assert [r.virtual_time for r in out3.history] != [
+        r.virtual_time for r in out1.history
+    ]
+
+
+# --------------------------------------------------------------------------
+# async semantics: staleness, stragglers, dropout, degenerate buffers
+# --------------------------------------------------------------------------
+
+def test_partial_buffer_accrues_staleness(setup):
+    """fedbuff with a small buffer under latency spread: in-flight tasks
+    anchor at old versions, so later flushes carry staleness > 0 and the
+    virtual clock advances monotonically."""
+    clients, loss_fn, params0 = setup
+    out = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=5, local_epochs=1, batch_size=4, seed=0,
+            aggregator="fedbuff:3", latency="lognormal:0.8",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert len(out.history) == 5
+    times = [r.virtual_time for r in out.history]
+    assert times == sorted(times) and times[0] > 0
+    assert all(r.staleness >= 0 for r in out.history)
+    assert max(r.staleness for r in out.history) > 0
+    assert all(np.isfinite(r.mean_local_loss) for r in out.history)
+    summary = out.summary()
+    assert summary["virtual_time"] == times[-1]
+    assert summary["mean_staleness"] > 0
+
+
+def test_trace_latency_flushes_small_clients_first(setup):
+    """Under size-proportional latency with a one-update buffer, the first
+    flush must contain exactly the smallest client — the straggler effect
+    the recruitment trade-off is about."""
+    clients, loss_fn, params0 = setup
+    out = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=3, local_epochs=1, batch_size=4, seed=0,
+            aggregator="fedbuff:1", latency="trace:1.0,0.0",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    # A flush lands at the next event boundary, so every client tied at the
+    # minimum size completes into the first flush together.
+    min_n = min(c.n_train for c in clients)
+    smallest = sorted(c.client_id for c in clients if c.n_train == min_n)
+    assert out.history[0].participant_ids == smallest
+    assert out.history[0].virtual_time == pytest.approx(min_n)
+
+
+def test_total_dropout_terminates_at_time_ceiling(setup):
+    """dropout=1: no update ever reaches the server; the virtual-time
+    ceiling stops the retry loop, and the params come back untouched."""
+    clients, loss_fn, params0 = setup
+    fed = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=3, local_epochs=1, batch_size=4, seed=0,
+            aggregator="fedbuff:2", latency="constant", dropout=1.0,
+            max_virtual_time=25.0,
+        ),
+        clients, loss_fn, opt(),
+    )
+    out = fed.run(params0)
+    assert out.history == []
+    assert fed.last_run_stats["flushes"] == 0
+    assert fed.last_run_stats["dropped"] > 0
+    assert fed.last_run_stats["virtual_time"] <= 25.0
+    for a, b in zip(jax.tree.leaves(out.params), jax.tree.leaves(params0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_total_dropout_without_ceiling_raises(setup):
+    """dropout=1 and no virtual-time ceiling: the runtime must refuse to
+    spin forever — a sustained drought of dropped tasks is a loud error."""
+    clients, loss_fn, params0 = setup
+    fed = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=3, local_epochs=1, batch_size=4, seed=0,
+            aggregator="fedbuff:2", latency="constant", dropout=1.0,
+        ),
+        clients, loss_fn, opt(),
+    )
+    with pytest.raises(RuntimeError, match="dropped"):
+        fed.run(params0)
+
+
+def test_fractional_fedbuff_buffer_resolves_against_federation(setup):
+    """'fedbuff:0.25' sizes the buffer as a fraction of the federation's
+    tasks once recruitment has run — same int-count/float-fraction grammar
+    as the selection specs."""
+    clients, loss_fn, params0 = setup
+    agg = resolve_aggregator("fedbuff:0.5")
+    assert agg.buffer_fraction == 0.5
+    agg.prepare(10)
+    assert agg.buffer_size == 5
+    resolve_aggregator("fedbuff:1.0").prepare(7)  # 1.0 = whole federation
+    assert resolve_aggregator("fedbuff:8").buffer_fraction is None
+    with pytest.raises(ValueError, match="fractional"):
+        resolve_aggregator("fedbuff:1.5")
+    # "fedbuff:1.0" + zero spread is the parity configuration by spec alone
+    sync = Federation(
+        FederationConfig(rounds=1, local_epochs=1, batch_size=4, aggregator="fedavg"),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    asyn = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=1, local_epochs=1, batch_size=4,
+            aggregator="fedbuff:1.0", latency="constant",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert_params_close(sync.params, asyn.params)
+
+
+def test_oversized_buffer_force_flushes(setup):
+    """fedbuff:K with K > federation size cannot fill its buffer; the
+    runtime force-flushes once every task has reported instead of
+    deadlocking — the semi-synchronous degenerate case."""
+    clients, loss_fn, params0 = setup
+    fed = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=2, local_epochs=1, batch_size=4, seed=0,
+            aggregator="fedbuff:99", latency="lognormal:0.5",
+        ),
+        clients, loss_fn, opt(),
+    )
+    out = fed.run(params0)
+    assert len(out.history) == 2
+    assert fed.last_run_stats["forced_flushes"] == 2
+    # every member reported into each forced flush
+    assert out.history[0].participant_ids == sorted(c.client_id for c in clients)
+
+
+def test_concurrency_cap_refills_without_starvation(setup):
+    """M_max semantics: a completion funds the next not-yet-trained task,
+    so a cap below the federation size still cycles through every client
+    and can fill a buffer larger than the cap without forced flushes."""
+    clients, loss_fn, params0 = setup
+    fed = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=3, local_epochs=1, batch_size=4, seed=0,
+            aggregator="fedbuff:4", latency="lognormal:0.5", concurrency=3,
+        ),
+        clients, loss_fn, opt(),
+    )
+    out = fed.run(params0)
+    assert len(out.history) == 3
+    # the buffer (4) exceeds the cap (3): only slot refill on completion
+    # can fill it, so no flush may fall back to the forced path
+    assert fed.last_run_stats["forced_flushes"] == 0
+    assert all(len(r.participant_ids) >= 4 for r in out.history)
+    # and the cap must not starve the tail of the task list: more distinct
+    # clients train than could ever fit in 3 concurrent slots
+    seen = {c for r in out.history for c in r.participant_ids}
+    assert len(seen) > 3
+
+
+def test_hierarchical_async_regions(setup):
+    clients, loss_fn, params0 = setup
+    agg = HierarchicalAsyncAggregator(num_regions=3)
+    groups = agg.task_groups(np.arange(10))
+    assert len(groups) == 3
+    np.testing.assert_array_equal(np.concatenate(groups), np.arange(10))
+    out = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=4, local_epochs=1, batch_size=4, seed=0,
+            aggregator="hierarchical-async:3", latency="lognormal:0.8",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert len(out.history) == 4
+    # each flush is one region's completion: a strict subset of the federation
+    assert all(
+        0 < len(r.participant_ids) < len(clients) for r in out.history
+    )
+    assert max(r.staleness for r in out.history) > 0
+
+
+# --------------------------------------------------------------------------
+# facade wiring and validation
+# --------------------------------------------------------------------------
+
+def test_sync_federation_rejects_buffered_aggregators(setup):
+    clients, loss_fn, _ = setup
+    with pytest.raises(ValueError, match="AsyncFederation"):
+        Federation(
+            FederationConfig(aggregator="fedbuff:4"), clients, loss_fn, opt()
+        )
+
+
+def test_async_federation_rejects_sync_aggregators(setup):
+    clients, loss_fn, _ = setup
+    with pytest.raises(ValueError, match="buffered aggregator"):
+        AsyncFederation(
+            AsyncFederationConfig(aggregator="fedavg"), clients, loss_fn, opt()
+        )
+    with pytest.raises(TypeError, match="AsyncFederationConfig"):
+        AsyncFederation(FederationConfig(), clients, loss_fn, opt())
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="rounds"):
+        AsyncFederationConfig(rounds=0)
+    with pytest.raises(ValueError, match="concurrency"):
+        AsyncFederationConfig(concurrency=0)
+    with pytest.raises(ValueError, match="max_virtual_time"):
+        AsyncFederationConfig(max_virtual_time=-1.0)
+    with pytest.raises(ValueError, match="buffer_size"):
+        FedBuffAggregator(buffer_size=0)
+    with pytest.raises(ValueError, match="region"):
+        HierarchicalAsyncAggregator(num_regions=0)
+
+
+def test_bad_task_groups_rejected(setup):
+    clients, loss_fn, params0 = setup
+
+    class Lossy(FedBuffAggregator):
+        def task_groups(self, federation_ids):
+            return [np.asarray(federation_ids)[:-1]]  # drops one member
+
+    fed = AsyncFederation(
+        AsyncFederationConfig(rounds=1, local_epochs=1, batch_size=4, aggregator=Lossy(2)),
+        clients, loss_fn, opt(),
+    )
+    with pytest.raises(ValueError, match="partition"):
+        fed.run(params0)
+
+
+def test_custom_async_aggregator_instance(setup):
+    """A user-defined buffered aggregator passed as an instance: flush on
+    every completion, plain unweighted delta averaging."""
+    clients, loss_fn, params0 = setup
+
+    class EveryCompletion(AsyncAggregator):
+        def ready(self, buffered):
+            return buffered >= 1
+
+        def combine(self, params, updates, version, total_weight):
+            coeff = 1.0 / max(len(updates), 1)
+            new = params
+            for u in updates:
+                new = jax.tree.map(
+                    lambda p, a, b: p + coeff * (a - b), new, u.params, u.anchor
+                )
+            return new
+
+    out = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=3, local_epochs=1, batch_size=4, aggregator=EveryCompletion(),
+            latency="lognormal:0.4",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    assert len(out.history) == 3
+    assert all(len(r.participant_ids) == 1 for r in out.history)
+
+
+def test_round_record_timing_fields(setup):
+    """Satellite: round_time_s everywhere; virtual_time/staleness are
+    async-only; summary() totals all three."""
+    clients, loss_fn, params0 = setup
+    sync = Federation(
+        FederationConfig(rounds=2, local_epochs=1, batch_size=4), clients, loss_fn, opt()
+    ).run(params0)
+    for r in sync.history:
+        assert r.round_time_s == r.wall_time_s >= 0
+        assert r.virtual_time is None and r.staleness is None
+    s = sync.summary()
+    assert s["total_round_time_s"] == pytest.approx(
+        sum(r.wall_time_s for r in sync.history)
+    )
+    assert s["virtual_time"] is None and s["mean_staleness"] is None
+
+    asyn = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=2, local_epochs=1, batch_size=4, aggregator="fedbuff:4",
+            latency="lognormal:0.5",
+        ),
+        clients, loss_fn, opt(),
+    ).run(params0)
+    a = asyn.summary()
+    assert a["virtual_time"] == asyn.history[-1].virtual_time > 0
+    assert a["mean_staleness"] is not None
+    assert a["total_round_time_s"] >= 0
+    n_tensors = len(jax.tree.leaves(params0))
+    for r in asyn.history:
+        assert r.params_down == r.params_up == len(r.participant_ids) * n_tensors
+
+
+def test_recruitment_composes_with_async_runtime(setup):
+    """nu-greedy recruitment runs before the event loop, identically to the
+    sync facade: only recruited clients ever appear in any flush."""
+    clients, loss_fn, params0 = setup
+    sync_ids, _ = Federation(
+        FederationConfig(recruitment="nu-greedy"), clients, loss_fn, opt()
+    ).build_federation()
+    asyn = AsyncFederation(
+        AsyncFederationConfig(
+            rounds=3, local_epochs=1, batch_size=4, recruitment="nu-greedy",
+            aggregator="fedbuff:2", latency="pareto:1.5",
+        ),
+        clients, loss_fn, opt(),
+    )
+    out = asyn.run(params0)
+    assert out.federation_ids.tolist() == sync_ids.tolist()
+    fed = set(sync_ids.tolist())
+    for r in out.history:
+        assert set(r.participant_ids) <= fed
