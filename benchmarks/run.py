@@ -292,6 +292,44 @@ def bench_pipeline(
 
 
 # --------------------------------------------------------------------------
+# control plane: submitted-job overhead vs direct Federation.run
+# --------------------------------------------------------------------------
+
+def bench_service(
+    rounds: int = 6,
+    scale: float = 0.02,
+    out_path: str = "BENCH_pipeline.json",
+) -> None:
+    """The federation-service envelope vs a direct ``Federation.run``.
+
+    Times the same workload end to end through both paths: bare
+    ``build_workload`` + facade run, and a job submitted through
+    ``repro.launch.federation_service`` (spec validation + hashing,
+    job.json, the per-round JSONL record stream, snapshots, final-params
+    save).  Budget: <= 2% total overhead.  Merges a ``service_overhead``
+    section into ``BENCH_pipeline.json`` next to the facade-overhead probe
+    (the two taxes stack on the same hot loop, so they belong in one
+    report).
+    """
+    from repro.experiments.paper import run_service_overhead
+
+    section = run_service_overhead(rounds=rounds, scale=scale)
+    path = Path(out_path)
+    report = json.loads(path.read_text()) if path.exists() else {
+        "bench": "staging_pipeline"
+    }
+    report["service_overhead"] = section
+    emit(
+        "pipeline_service_overhead",
+        1e6 * section["service_total_s"],
+        f"overhead={100 * section['overhead_frac']:+.2f}%"
+        f";within_budget={section['within_budget']}",
+    )
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}", flush=True)
+
+
+# --------------------------------------------------------------------------
 # async runtime: simulated time-to-target under straggler distributions
 # --------------------------------------------------------------------------
 
@@ -421,13 +459,17 @@ def main() -> None:
     ap.add_argument("--skip-paper", action="store_true")
     ap.add_argument(
         "--mode",
-        choices=["all", "cohort", "kernels", "paper", "paper189", "pipeline", "async"],
+        choices=[
+            "all", "cohort", "kernels", "paper", "paper189", "pipeline",
+            "async", "service",
+        ],
         default="all",
         help="'cohort' times sequential vs vectorized federated rounds only; "
         "'paper189' runs the full five-setting grid at 189 clients; "
         "'pipeline' compares rebuild-per-round vs device-resident staging; "
         "'async' simulates recruited vs all-clients time-to-target-loss "
-        "under straggler latency models",
+        "under straggler latency models; 'service' probes the job-service "
+        "envelope vs a direct Federation.run (merged into BENCH_pipeline.json)",
     )
     ap.add_argument("--cohort-clients", type=int, nargs="+", default=[8, 32, 128])
     ap.add_argument("--paper189-rounds", type=int, default=3)
@@ -474,6 +516,10 @@ def main() -> None:
             cohort_chunk=args.pipeline_chunk,
             mesh_auto=args.mesh_auto,
         )
+        print(f"# total benchmark time: {time.time()-t0:.1f}s")
+        return
+    if args.mode == "service":
+        bench_service(rounds=args.pipeline_rounds)
         print(f"# total benchmark time: {time.time()-t0:.1f}s")
         return
     if args.mode == "async":

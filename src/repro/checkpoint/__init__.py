@@ -1,3 +1,21 @@
-from repro.checkpoint.store import load_pytree, restore_server_state, save_pytree, save_server_state
+from repro.checkpoint.store import (
+    federation_snapshot_state,
+    has_federation_snapshot,
+    load_federation_snapshot,
+    load_pytree,
+    restore_server_state,
+    save_federation_snapshot,
+    save_pytree,
+    save_server_state,
+)
 
-__all__ = ["load_pytree", "save_pytree", "save_server_state", "restore_server_state"]
+__all__ = [
+    "load_pytree",
+    "save_pytree",
+    "save_server_state",
+    "restore_server_state",
+    "save_federation_snapshot",
+    "load_federation_snapshot",
+    "federation_snapshot_state",
+    "has_federation_snapshot",
+]

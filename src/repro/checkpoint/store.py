@@ -1,8 +1,29 @@
-"""Pytree checkpointing: npz payload + msgpack manifest of the treedef.
+"""Pytree checkpointing: npz payload + JSON manifest of the treedef.
 
 No orbax offline; this covers what the framework needs — atomic save/restore
-of parameter/optimizer pytrees and the federated server's round state — with
+of parameter/optimizer pytrees and full federation-state snapshots — with
 structure validation on load.
+
+Two storage formats live here:
+
+* **Pytree checkpoints** (``save_pytree`` / ``load_pytree``): one pytree of
+  arrays plus a small JSON metadata dict.  Used for model params and the
+  legacy server round state.
+* **Federation snapshots** (``save_federation_snapshot`` /
+  ``load_federation_snapshot``): the resumable state of a live federation
+  run at a round/flush boundary — *several* named pytrees (the global
+  params plus every in-flight update's params/anchor), named standalone
+  arrays (PRNG key data, buffered losses), and a JSON ``state`` dict
+  carrying everything scalar: round index, numpy bit-generator states, the
+  async runtime's virtual-clock state and pending-event list, and the
+  round-record history.  The snapshot dataclasses that produce/consume
+  these live with their runtimes (``repro.federated.api.FederationSnapshot``
+  and ``repro.federated.runtime.async_federation.AsyncFederationSnapshot``);
+  this module only knows how to persist them.
+
+Both formats write atomically (payload and manifest land via ``os.replace``)
+so a writer killed mid-save can never leave a half-snapshot that loads —
+the property the control plane's kill-and-resume contract rests on.
 """
 
 from __future__ import annotations
@@ -19,6 +40,8 @@ PyTree = Any
 
 _MANIFEST = "manifest.json"
 _PAYLOAD = "arrays.npz"
+_SNAP_MANIFEST = "snapshot.json"
+_SNAP_PAYLOAD = "snapshot.npz"
 
 
 def _flatten_with_paths(tree: PyTree) -> list[tuple[str, np.ndarray]]:
@@ -28,6 +51,20 @@ def _flatten_with_paths(tree: PyTree) -> list[tuple[str, np.ndarray]]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         out.append((key, np.asarray(leaf)))
     return out
+
+
+def _atomic_write_npz(directory: str, filename: str, payload: dict) -> None:
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
+    with os.fdopen(fd, "wb") as f:  # file handle: savez must not mangle the name
+        np.savez(f, **payload)
+    os.replace(tmp, os.path.join(directory, filename))
+
+
+def _atomic_write_json(directory: str, filename: str, obj: dict) -> None:
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".json.tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, os.path.join(directory, filename))
 
 
 def save_pytree(directory: str, tree: PyTree, metadata: dict | None = None) -> None:
@@ -41,14 +78,8 @@ def save_pytree(directory: str, tree: PyTree, metadata: dict | None = None) -> N
         "shapes": [list(a.shape) for _, a in entries],
         "metadata": metadata or {},
     }
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
-    with os.fdopen(fd, "wb") as f:  # file handle: savez must not mangle the name
-        np.savez(f, **payload)
-    os.replace(tmp, os.path.join(directory, _PAYLOAD))
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".json.tmp")
-    with os.fdopen(fd, "w") as f:
-        json.dump(manifest, f)
-    os.replace(tmp, os.path.join(directory, _MANIFEST))
+    _atomic_write_npz(directory, _PAYLOAD, payload)
+    _atomic_write_json(directory, _MANIFEST, manifest)
 
 
 def load_pytree(directory: str, like: PyTree) -> PyTree:
@@ -95,3 +126,106 @@ def save_server_state(directory: str, params: PyTree, round_index: int, history:
 def restore_server_state(directory: str, like_params: PyTree) -> tuple[PyTree, dict]:
     params = load_pytree(directory, like_params)
     return params, checkpoint_metadata(directory)
+
+
+# ---------------------------------------------------------------------------
+# federation-state snapshots
+# ---------------------------------------------------------------------------
+
+
+def save_federation_snapshot(
+    directory: str,
+    *,
+    trees: dict[str, PyTree],
+    arrays: dict[str, np.ndarray] | None = None,
+    state: dict | None = None,
+) -> None:
+    """Atomically persist one federation-state snapshot.
+
+    ``trees`` maps names to pytrees that all share the structure of the
+    run's parameter pytree — ``"params"`` plus, for async runs, each
+    pending/buffered update's ``params``/``anchor``.  ``arrays`` maps names
+    to standalone numpy arrays (jax PRNG key data, per-update losses and
+    client ids).  ``state`` must be JSON-serializable; it carries the
+    scalar run state (round index, numpy bit-generator state dicts, the
+    virtual clock, the record history) and is returned verbatim by
+    :func:`federation_snapshot_state` without touching the array payload.
+
+    Each call overwrites the previous snapshot in ``directory``; payload
+    first, manifest second, both via rename, so readers only ever see a
+    manifest whose payload is complete.
+    """
+    os.makedirs(directory, exist_ok=True)
+    arrays = arrays or {}
+    entries: list[tuple[str, np.ndarray]] = []
+    tree_manifest: dict[str, list[str]] = {}
+    for name in sorted(trees):
+        flat = _flatten_with_paths(trees[name])
+        tree_manifest[name] = [k for k, _ in flat]
+        entries.extend((f"tree:{name}:{k}", arr) for k, arr in flat)
+    for name in sorted(arrays):
+        entries.append((f"array:{name}", np.asarray(arrays[name])))
+    payload = {f"a{i}": arr for i, (_, arr) in enumerate(entries)}
+    manifest = {
+        "keys": [k for k, _ in entries],
+        "dtypes": [str(a.dtype) for _, a in entries],
+        "shapes": [list(a.shape) for _, a in entries],
+        "trees": tree_manifest,
+        "arrays": sorted(arrays),
+        "state": state or {},
+    }
+    _atomic_write_npz(directory, _SNAP_PAYLOAD, payload)
+    _atomic_write_json(directory, _SNAP_MANIFEST, manifest)
+
+
+def has_federation_snapshot(directory: str) -> bool:
+    return os.path.exists(os.path.join(directory, _SNAP_MANIFEST)) and os.path.exists(
+        os.path.join(directory, _SNAP_PAYLOAD)
+    )
+
+
+def federation_snapshot_state(directory: str) -> dict:
+    """The snapshot's scalar ``state`` dict, without loading any arrays."""
+    with open(os.path.join(directory, _SNAP_MANIFEST)) as f:
+        return json.load(f)["state"]
+
+
+def load_federation_snapshot(
+    directory: str, like_params: PyTree
+) -> tuple[dict[str, PyTree], dict[str, np.ndarray], dict]:
+    """Restore ``(trees, arrays, state)`` as saved by the snapshot writer.
+
+    Every named tree is validated against and unflattened into the
+    structure of ``like_params`` (the model built from the job spec), so a
+    spec/model mismatch fails loudly here rather than as silent shape
+    garbage mid-run.  Arrays come back with their stored dtypes.
+    """
+    with open(os.path.join(directory, _SNAP_MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, _SNAP_PAYLOAD))
+    by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+
+    like_entries = _flatten_with_paths(like_params)
+    like_keys = [k for k, _ in like_entries]
+    treedef = jax.tree_util.tree_structure(like_params)
+    trees: dict[str, PyTree] = {}
+    for name, keys in manifest["trees"].items():
+        if keys != like_keys:
+            missing = set(like_keys) - set(keys)
+            extra = set(keys) - set(like_keys)
+            raise ValueError(
+                f"snapshot tree {name!r} does not match the model structure; "
+                f"missing={missing} extra={extra}"
+            )
+        leaves = []
+        for key, ref in like_entries:
+            arr = by_key[f"tree:{name}:{key}"]
+            if list(arr.shape) != list(ref.shape):
+                raise ValueError(
+                    f"snapshot tree {name!r} shape mismatch at {key}: "
+                    f"{arr.shape} vs {ref.shape}"
+                )
+            leaves.append(arr.astype(ref.dtype))
+        trees[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+    arrays = {name: by_key[f"array:{name}"] for name in manifest["arrays"]}
+    return trees, arrays, manifest["state"]

@@ -803,6 +803,191 @@ def run_async_comparison(
     return report
 
 
+def job_spec_for(setting: str, exp: ExperimentConfig, seed: int = 0) -> dict[str, Any]:
+    """One section-6 setting -> a control-plane job spec (a submit file).
+
+    The declarative twin of :func:`run_setting`: the same
+    ``policies_for`` translation table rendered as the JSON the
+    :mod:`repro.launch.federation_service` CLI accepts, so every paper
+    setting can run as a submitted job with checkpoint/resume and a
+    streamed record file.  ``central`` is pooled training, not a
+    federation — it has no job-spec form.
+    """
+    if setting == "central":
+        raise ValueError("'central' is pooled training, not a federated job")
+    if setting not in MODEL_SETTINGS:
+        raise ValueError(f"unknown setting {setting}; choose from {MODEL_SETTINGS}")
+    if exp.mesh not in (None, "auto"):
+        raise ValueError(
+            "job specs are JSON: mesh must be null or 'auto' (drive the "
+            "Federation facade directly to pass a Mesh object)"
+        )
+    policies = policies_for(setting, exp)
+    if not all(isinstance(v, str) for v in policies.values()):
+        raise ValueError(
+            "job specs are JSON: policy overrides must be spec strings, "
+            "not instances"
+        )
+    return {
+        "name": setting,
+        "mode": "sync",
+        "rounds": exp.rounds,
+        "local_epochs": exp.local_epochs,
+        "batch_size": exp.batch_size,
+        "seed": seed,
+        **policies,
+        "engine": exp.engine,
+        "cohort_chunk": exp.cohort_chunk,
+        "mesh": exp.mesh,
+        "staging": exp.staging,
+        "prefetch": exp.prefetch,
+        "donate_buffers": exp.donate_buffers,
+        "data": {"scale": exp.cohort_scale, "seed": seed},
+        "model": {"use_pallas": exp.use_pallas},
+        "optimizer": {
+            "learning_rate": exp.learning_rate,
+            "weight_decay": exp.weight_decay,
+        },
+    }
+
+
+def run_settings_as_jobs(
+    exp: ExperimentConfig,
+    run_root: str,
+    *,
+    settings: tuple[str, ...] = ("federated-ac", "federated-src"),
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict[str, Any]:
+    """Submit section-6 settings through the control plane.
+
+    Each setting becomes one run directory under ``run_root`` (job.json,
+    records.jsonl, checkpoint/, final/, result.json).  Test-split metric
+    evaluation stays with :func:`run_setting`; this driver exists so the
+    paper grid exercises — and is recoverable through — the service path.
+    """
+    import os
+
+    from repro.launch.federation_service import submit_job
+
+    results: dict[str, Any] = {}
+    for setting in settings:
+        spec = job_spec_for(setting, exp, seed=seed)
+        out = submit_job(spec, os.path.join(run_root, setting))
+        if verbose:
+            s = out["summary"]
+            print(
+                f"  [job {setting}] rounds={s['rounds']} "
+                f"federation={s['federation_size']} "
+                f"tau={s['total_wall_time_s']:.1f}s",
+                flush=True,
+            )
+        results[setting] = out
+    return results
+
+
+def run_service_overhead(
+    *,
+    rounds: int = 6,
+    local_epochs: int = 1,
+    batch_size: int = 8,
+    seed: int = 0,
+    scale: float = 0.02,
+    checkpoint_every: int = 2,
+    repeats: int = 3,
+    verbose: bool = True,
+) -> dict[str, Any]:
+    """The control-plane tax: a submitted job vs direct ``Federation.run``.
+
+    Both paths execute the identical workload — ``build_workload`` on the
+    same normalized spec, then the same facade run — but the submitted job
+    also pays validation + spec hashing, job.json persistence, the per
+    round JSONL record stream, snapshots at ``checkpoint_every``, and the
+    final-params save.  That whole service envelope must cost <= 2% over
+    the direct run.
+
+    Same estimator story as :func:`run_facade_overhead`: CI noise dwarfs
+    the budget, timing noise is additive, so each path's *floor* over
+    alternating end-to-end repeats (first repeat excluded per path — it
+    pays jit compilation) isolates the systematic cost; per-repeat totals
+    ship in the report so the probe's own resolution is visible.
+    """
+    import tempfile
+
+    from repro.launch.federation_service import (
+        build_workload,
+        federation_config_from_spec,
+        submit_job,
+        validate_job_spec,
+    )
+
+    spec = validate_job_spec(
+        {
+            "name": "service-overhead",
+            "mode": "sync",
+            "rounds": rounds,
+            "local_epochs": local_epochs,
+            "batch_size": batch_size,
+            "seed": seed,
+            "recruitment": "all",
+            "selection": "uniform",
+            "checkpoint_every": checkpoint_every,
+            "data": {"scale": scale, "seed": seed, "split_mode": "stratified"},
+            "model": {"hidden_dim": 8, "num_layers": 1},
+        }
+    )
+
+    def direct_total() -> float:
+        t0 = time.perf_counter()
+        workload = build_workload(spec)
+        federation = Federation(
+            federation_config_from_spec(spec),
+            workload.clients,
+            workload.loss_fn,
+            workload.optimizer,
+        )
+        out = federation.run(workload.init_params)
+        jax.block_until_ready(out.params)
+        return time.perf_counter() - t0
+
+    def service_total() -> float:
+        with tempfile.TemporaryDirectory() as run_dir:
+            t0 = time.perf_counter()
+            submit_job(spec, run_dir)
+            return time.perf_counter() - t0
+
+    # Alternate the paths so a throttling window cannot hit only one; the
+    # first repeat of each pays compilation and is excluded from the floor.
+    direct_totals, service_totals = [], []
+    for _ in range(max(repeats, 1) + 1):
+        direct_totals.append(direct_total())
+        service_totals.append(service_total())
+    direct = float(np.min(direct_totals[1:]))
+    service = float(np.min(service_totals[1:]))
+    overhead = service / direct - 1.0
+    report = {
+        "bench": "service_overhead",
+        "rounds": rounds,
+        "batch_size": batch_size,
+        "checkpoint_every": checkpoint_every,
+        "repeats": repeats,
+        "direct_total_s": direct,
+        "service_total_s": service,
+        "direct_totals": direct_totals,
+        "service_totals": service_totals,
+        "overhead_frac": overhead,
+        "budget_frac": 0.02,
+        "within_budget": bool(overhead <= 0.02),
+    }
+    if verbose:
+        print(
+            f"  [service] direct={direct:.4f}s submitted={service:.4f}s "
+            f"overhead={100 * overhead:+.2f}% (budget 2%)",
+            flush=True,
+        )
+    return report
+
+
 def run_seeds(
     setting: str, exp: ExperimentConfig, seeds: list[int], verbose: bool = True
 ) -> dict[str, Any]:

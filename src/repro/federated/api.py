@@ -55,6 +55,26 @@ How the *train -> aggregate* pair executes depends on the aggregator's
   params, which the vectorized engine never materializes (it reduces
   in-jit); these rounds run the per-client trainer and hand the stacked
   pytree to ``Aggregator.aggregate``.
+* ``"buffered"`` (fedbuff, hierarchical-async) — a fourth delivery mode
+  that never runs here: buffered aggregators are driven by the event loop
+  of :class:`repro.federated.runtime.AsyncFederation`, and this facade
+  rejects them at construction with a pointer to the async runtime.
+
+Seeded-replay determinism
+-------------------------
+Every run is a pure function of ``FederationConfig.seed``.  Three
+independent streams derive from it: the *recruitment* generator
+(``default_rng([seed, 1])``, consumed once before round one), the shared
+*batch-plan* generator (``default_rng(seed)``, consumed in client-major
+order by selection and the schedule builders), and the jax *key chain*
+(``jax.random.key(seed)``, advanced one ``split`` per cohort chunk /
+sequential client via ``chain_split_keys``).  Policies draw only from the
+generators they are handed at well-defined points, so two runs with equal
+seeds replay bit-identically — and a run resumed from a
+:class:`FederationSnapshot` (params + round index + both stream states +
+adaptive policy state) continues exactly where the interrupted one left
+off.  This contract is what the control plane's kill-and-resume parity
+tests (`tests/test_federation_service.py`) pin down.
 
 Legacy ``FederatedServer`` / ``FederatedConfig`` remain as thin deprecation
 shims in ``repro.federated.server`` that map onto these policies.
@@ -140,6 +160,18 @@ class SelectionPolicy:
         raise NotImplementedError
 
     def observe(self, participant_ids: np.ndarray, losses: np.ndarray) -> None:
+        pass
+
+    def state_dict(self) -> dict:
+        """JSON-serializable adaptive state for checkpoint/resume.
+
+        Stateless policies (the default) return ``{}``; adaptive ones
+        (e.g. loss-weighted) must round-trip everything ``observe``
+        accumulated, or a resumed run diverges from the uninterrupted one.
+        """
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
         pass
 
 
@@ -422,6 +454,12 @@ class LossWeightedSelection(SelectionPolicy):
             if np.isfinite(loss):
                 self._loss[int(cid)] = float(loss)
 
+    def state_dict(self) -> dict:
+        return {"loss": {str(cid): loss for cid, loss in self._loss.items()}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._loss = {int(cid): float(v) for cid, v in state.get("loss", {}).items()}
+
     def select(self, round_index, federation_ids, rng) -> np.ndarray:
         ids = np.asarray(federation_ids)
         n = len(ids)
@@ -540,6 +578,14 @@ class RoundRecord:
         (``wall_time_s`` kept for compatibility with existing reports)."""
         return self.wall_time_s
 
+    def to_state(self) -> dict:
+        """JSON-serializable form — one JSONL line of the record stream."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_state(cls, state: dict) -> "RoundRecord":
+        return cls(**state)
+
 
 @dataclasses.dataclass
 class FederatedRunResult:
@@ -580,6 +626,73 @@ class FederatedRunResult:
             if async_records
             else None,
         }
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FederationSnapshot:
+    """Everything ``Federation.run`` needs to continue from a round boundary.
+
+    Captured by the ``snapshot_hook`` after each round's record lands and
+    fed back through ``Federation.run(..., resume=snapshot)``: the resumed
+    run restores the parameter pytree exactly (npz round-trips are
+    bit-exact), both PRNG streams (the numpy batch-plan generator's
+    bit-generator state and the jax key chain's raw key data), the record
+    history, and any adaptive selection-policy state — so it consumes the
+    identical batches and keys the uninterrupted run would have, and the
+    final params match to float tolerance.  Recruitment is *not*
+    snapshotted: it derives deterministically from the seed and is re-run
+    on resume.
+    """
+
+    round_index: int              # the next round to run
+    params: PyTree
+    np_rng_state: dict            # batch-plan generator bit_generator.state
+    jax_key_data: np.ndarray      # raw key data of the per-chunk key chain
+    history: list[RoundRecord]
+    selection_state: dict
+
+    def save(self, directory: str, extra_state: dict | None = None) -> None:
+        """Persist atomically via ``repro.checkpoint.store`` (overwrites)."""
+        from repro.checkpoint.store import save_federation_snapshot
+
+        state = {
+            "kind": "sync",
+            "round_index": int(self.round_index),
+            "np_rng_state": self.np_rng_state,
+            "history": [r.to_state() for r in self.history],
+            "selection_state": self.selection_state,
+        }
+        state.update(extra_state or {})
+        save_federation_snapshot(
+            directory,
+            trees={"params": self.params},
+            arrays={"jax_key_data": np.asarray(self.jax_key_data)},
+            state=state,
+        )
+
+    @classmethod
+    def load(cls, directory: str, like_params: PyTree) -> "FederationSnapshot":
+        from repro.checkpoint.store import load_federation_snapshot
+
+        trees, arrays, state = load_federation_snapshot(directory, like_params)
+        if state.get("kind") != "sync":
+            raise ValueError(
+                f"snapshot in {directory} is {state.get('kind')!r}, not a "
+                "synchronous federation snapshot"
+            )
+        return cls(
+            round_index=int(state["round_index"]),
+            params=trees["params"],
+            np_rng_state=state["np_rng_state"],
+            jax_key_data=arrays["jax_key_data"],
+            history=[RoundRecord.from_state(r) for r in state["history"]],
+            selection_state=state.get("selection_state", {}),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -784,7 +897,23 @@ class Federation:
         self,
         init_params: PyTree,
         progress: Callable[[RoundRecord], None] | None = None,
+        snapshot_hook: Callable[[FederationSnapshot], None] | None = None,
+        resume: FederationSnapshot | None = None,
     ) -> FederatedRunResult:
+        """Run the round program (optionally resuming a snapshotted run).
+
+        ``progress`` receives each :class:`RoundRecord` as it lands — the
+        record stream the control plane fans out to subscribers.
+        ``snapshot_hook`` receives a :class:`FederationSnapshot` after
+        every round; the hook decides whether/where to persist it (it may
+        also raise to preempt the run — nothing after the snapshot is
+        lost).  ``resume`` continues a run from such a snapshot: the
+        restored streams make the continuation consume the same batches
+        and keys the uninterrupted run would have, so the final params
+        agree to float tolerance.  ``total_wall_time_s`` counts only the
+        resumed segment; ``history`` and ``total_local_steps`` span the
+        whole run.
+        """
         cfg = self.config
         rng = np.random.default_rng(cfg.seed)
         jax_rng = jax.random.key(cfg.seed)
@@ -805,6 +934,19 @@ class Federation:
             )
         params = init_params
         history: list[RoundRecord] = []
+        start_round = 0
+        if resume is not None:
+            if not (0 <= int(resume.round_index) <= cfg.rounds):
+                raise ValueError(
+                    f"snapshot round_index {resume.round_index} outside the "
+                    f"configured {cfg.rounds}-round budget"
+                )
+            params = resume.params
+            start_round = int(resume.round_index)
+            rng.bit_generator.state = resume.np_rng_state
+            jax_rng = jax.random.wrap_key_data(jnp.asarray(resume.jax_key_data))
+            history = list(resume.history)
+            self.selection_policy.load_state_dict(resume.selection_state)
         # Pin the vectorized schedule's step axis to the federation-wide max
         # so every round shares one compiled shape whatever mix is sampled.
         federation_spe = cohort_steps_per_epoch(
@@ -816,7 +958,7 @@ class Federation:
         model_nbytes = params_nbytes(init_params)
         t_start = time.perf_counter()
 
-        for rnd in range(cfg.rounds):
+        for rnd in range(start_round, cfg.rounds):
             t_round = time.perf_counter()
             participants = np.asarray(
                 self.selection_policy.select(rnd, federation_ids, rng)
@@ -846,6 +988,17 @@ class Federation:
             history.append(record)
             if progress is not None:
                 progress(record)
+            if snapshot_hook is not None:
+                snapshot_hook(
+                    FederationSnapshot(
+                        round_index=rnd + 1,
+                        params=params,
+                        np_rng_state=rng.bit_generator.state,
+                        jax_key_data=np.asarray(jax.random.key_data(jax_rng)),
+                        history=list(history),
+                        selection_state=self.selection_policy.state_dict(),
+                    )
+                )
 
         return FederatedRunResult(
             params=params,

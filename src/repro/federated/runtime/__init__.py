@@ -4,12 +4,17 @@ Importing this package registers the buffered aggregators (``"fedbuff:K"``,
 ``"hierarchical-async:R"``) into the shared aggregator registry and exposes
 the latency/dropout model registries (``"constant"``, ``"lognormal:0.5"``,
 ``"pareto:1.5"``, ``"trace"``, ``"bernoulli:0.1"``).  The entry point is
-:class:`AsyncFederation` driven by an :class:`AsyncFederationConfig`.
+:class:`AsyncFederation` driven by an :class:`AsyncFederationConfig`;
+:class:`AsyncFederationSnapshot` is its checkpoint/resume image (the
+control plane in :mod:`repro.launch.federation_service` persists one at
+every flush boundary).
 """
 
 from repro.federated.runtime.async_federation import (
     AsyncFederation,
     AsyncFederationConfig,
+    AsyncFederationSnapshot,
+    PendingEvent,
 )
 from repro.federated.runtime.latency import (
     BernoulliDropout,
@@ -39,6 +44,8 @@ from repro.federated.runtime.staleness import (
 __all__ = [
     "AsyncFederation",
     "AsyncFederationConfig",
+    "AsyncFederationSnapshot",
+    "PendingEvent",
     "AsyncAggregator",
     "AsyncUpdate",
     "FedBuffAggregator",

@@ -28,6 +28,22 @@ each flush appends a :class:`~repro.federated.api.RoundRecord` whose
 clock, so recruited-vs-all comparisons can quote *simulated
 time-to-target-loss* — the paper's training-time claim under realistic
 straggler behavior.
+
+Seeded-replay determinism and checkpoint/resume
+-----------------------------------------------
+An async run is a pure function of the seed: the batch-plan generator and
+jax key chain advance in *dispatch order* (which the deterministic
+scheduler fixes), and all timeline randomness (latencies, dropouts,
+persistent per-client rates) draws from the scheduler's own seeded stream
+at dispatch.  A flush boundary is therefore a complete cut through the
+run's state: global params + server version, the event heap (whose pending
+completions carry already-trained updates), the ready/idle task queues,
+all three stream states, and the latency model's drawn rates.
+:class:`AsyncFederationSnapshot` captures exactly that cut; a run resumed
+from it re-dispatches from identical streams and replays the remaining
+timeline bit-identically — same virtual clock, same event order, same
+batches and keys — which the control plane's kill-and-resume parity tests
+assert (params to 1e-5, scheduler state exact).
 """
 
 from __future__ import annotations
@@ -38,6 +54,7 @@ import time
 from typing import Any, Callable, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import ClientDataset, cohort_steps_per_epoch
@@ -56,7 +73,7 @@ from repro.federated.runtime.latency import (
     resolve_dropout,
     resolve_latency,
 )
-from repro.federated.runtime.scheduler import VirtualScheduler
+from repro.federated.runtime.scheduler import Event, VirtualScheduler
 from repro.federated.runtime.staleness import AsyncAggregator, AsyncUpdate
 from repro.optim.adamw import AdamW
 
@@ -109,6 +126,178 @@ class _Completion:
 
     group_index: int
     update: AsyncUpdate | None  # None = the task dropped out (no result)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingEvent:
+    """A serializable image of one not-yet-popped scheduler event.
+
+    ``group_index``/``update`` unpack the COMPLETE payload (``update`` is
+    ``None`` for dropped tasks *and* for non-COMPLETE kinds); ``seq`` is
+    preserved so restored simultaneity resolves exactly as scheduled.
+    """
+
+    time: float
+    seq: int
+    kind: str
+    group_index: int | None
+    update: AsyncUpdate | None
+
+
+def _pack_update(
+    prefix: str, update: AsyncUpdate, trees: dict, arrays: dict
+) -> dict:
+    """Split one AsyncUpdate into (scalar dict, named trees, named arrays)."""
+    trees[f"{prefix}.params"] = update.params
+    trees[f"{prefix}.anchor"] = update.anchor
+    arrays[f"{prefix}.losses"] = np.asarray(update.losses, dtype=np.float32)
+    arrays[f"{prefix}.client_ids"] = np.asarray(update.client_ids, dtype=np.int64)
+    return {
+        "ref": prefix,
+        "weight": float(update.weight),
+        "version": int(update.version),
+        "local_steps": int(update.local_steps),
+    }
+
+
+def _unpack_update(entry: dict, trees: dict, arrays: dict) -> AsyncUpdate:
+    prefix = entry["ref"]
+    return AsyncUpdate(
+        client_ids=np.asarray(arrays[f"{prefix}.client_ids"]),
+        params=trees[f"{prefix}.params"],
+        anchor=trees[f"{prefix}.anchor"],
+        weight=float(entry["weight"]),
+        version=int(entry["version"]),
+        losses=np.asarray(arrays[f"{prefix}.losses"], dtype=np.float32),
+        local_steps=int(entry["local_steps"]),
+    )
+
+
+@dataclasses.dataclass
+class AsyncFederationSnapshot:
+    """Everything ``AsyncFederation.run`` needs to continue from a flush.
+
+    Captured by the ``snapshot_hook`` right after a flush's record lands
+    and the idle tasks are requeued (the point where the loop's next action
+    — dispatching ready tasks — is the same whether the run continues or
+    resumes).  Pending completions on the event heap carry fully-trained
+    updates (their params/anchors are serialized by value), so a resumed
+    run never retrains work that was already in flight; it only replays
+    the timeline forward from restored streams.
+    """
+
+    version: int                  # server parameter versions flushed so far
+    params: PyTree
+    np_rng_state: dict            # batch-plan generator state
+    jax_key_data: np.ndarray      # per-task key chain raw data
+    sched_state: dict             # virtual clock / seq / processed / stream
+    events: list[PendingEvent]    # the un-popped event heap
+    buffer: list[AsyncUpdate]     # completions awaiting the next flush
+    ready: list[int]              # task groups waiting for a dispatch slot
+    idle: list[int]               # task groups waiting for the next flush
+    in_flight: int
+    drought: int
+    flush_pending: bool
+    latency_state: dict           # drawn persistent per-client rates
+    stats: dict
+    history: list[RoundRecord]
+
+    @property
+    def round_index(self) -> int:
+        """Flush count — the async analogue of the sync snapshot's field."""
+        return self.version
+
+    def save(self, directory: str, extra_state: dict | None = None) -> None:
+        """Persist atomically via ``repro.checkpoint.store`` (overwrites)."""
+        from repro.checkpoint.store import save_federation_snapshot
+
+        trees: dict[str, Any] = {"params": self.params}
+        arrays: dict[str, np.ndarray] = {
+            "jax_key_data": np.asarray(self.jax_key_data)
+        }
+        events_state = []
+        for i, event in enumerate(self.events):
+            entry: dict[str, Any] = {
+                "time": event.time,
+                "seq": event.seq,
+                "kind": event.kind,
+                "group_index": event.group_index,
+                "update": None,
+            }
+            if event.update is not None:
+                entry["update"] = _pack_update(f"event{i}", event.update, trees, arrays)
+            events_state.append(entry)
+        buffer_state = [
+            _pack_update(f"buffer{i}", u, trees, arrays)
+            for i, u in enumerate(self.buffer)
+        ]
+        state = {
+            "kind": "async",
+            "version": int(self.version),
+            "np_rng_state": self.np_rng_state,
+            "sched": self.sched_state,
+            "events": events_state,
+            "buffer": buffer_state,
+            "ready": [int(i) for i in self.ready],
+            "idle": [int(i) for i in self.idle],
+            "in_flight": int(self.in_flight),
+            "drought": int(self.drought),
+            "flush_pending": bool(self.flush_pending),
+            "latency_state": self.latency_state,
+            "stats": self.stats,
+            "history": [r.to_state() for r in self.history],
+        }
+        state.update(extra_state or {})
+        save_federation_snapshot(directory, trees=trees, arrays=arrays, state=state)
+
+    @classmethod
+    def load(cls, directory: str, like_params: PyTree) -> "AsyncFederationSnapshot":
+        from repro.checkpoint.store import load_federation_snapshot
+
+        trees, arrays, state = load_federation_snapshot(directory, like_params)
+        if state.get("kind") != "async":
+            raise ValueError(
+                f"snapshot in {directory} is {state.get('kind')!r}, not an "
+                "async federation snapshot"
+            )
+        events = []
+        for entry in state["events"]:
+            update = (
+                _unpack_update(entry["update"], trees, arrays)
+                if entry["update"] is not None
+                else None
+            )
+            events.append(
+                PendingEvent(
+                    time=float(entry["time"]),
+                    seq=int(entry["seq"]),
+                    kind=entry["kind"],
+                    group_index=entry["group_index"],
+                    update=update,
+                )
+            )
+        return cls(
+            version=int(state["version"]),
+            params=trees["params"],
+            np_rng_state=state["np_rng_state"],
+            jax_key_data=arrays["jax_key_data"],
+            sched_state=state["sched"],
+            events=events,
+            buffer=[_unpack_update(e, trees, arrays) for e in state["buffer"]],
+            ready=[int(i) for i in state["ready"]],
+            idle=[int(i) for i in state["idle"]],
+            in_flight=int(state["in_flight"]),
+            drought=int(state["drought"]),
+            flush_pending=bool(state["flush_pending"]),
+            latency_state=state.get("latency_state", {}),
+            stats=dict(state.get("stats", {})),
+            history=[RoundRecord.from_state(r) for r in state["history"]],
+        )
 
 
 class AsyncFederation:
@@ -188,7 +377,18 @@ class AsyncFederation:
         self,
         init_params: PyTree,
         progress: Callable[[RoundRecord], None] | None = None,
+        snapshot_hook: Callable[[AsyncFederationSnapshot], None] | None = None,
+        resume: AsyncFederationSnapshot | None = None,
     ) -> FederatedRunResult:
+        """Run the event loop; optionally checkpoint at every flush.
+
+        ``snapshot_hook`` (if given) is called with a fresh
+        :class:`AsyncFederationSnapshot` after each non-final flush, at the
+        exact cut where resuming and continuing are indistinguishable.
+        ``resume`` restores such a snapshot: streams, clock, queues, and
+        in-flight completions are reinstated and the remaining timeline
+        replays bit-identically.
+        """
         cfg = self.config
         rng = np.random.default_rng(cfg.seed)      # the batch-plan stream
         jax_rng = jax.random.key(cfg.seed)         # the per-task key chain
@@ -237,8 +437,71 @@ class AsyncFederation:
         # p < 1 a run of this length has probability p**threshold —
         # vanishingly small for every non-degenerate model.)
         drought, drought_limit = 0, max(100, 20 * len(groups))
+        if resume is not None:
+            if not (0 <= int(resume.version) < int(cfg.rounds)):
+                raise ValueError(
+                    f"cannot resume at flush {resume.version} of a run with "
+                    f"rounds={cfg.rounds} (already complete or corrupt)"
+                )
+            params = resume.params
+            version = int(resume.version)
+            rng.bit_generator.state = resume.np_rng_state
+            jax_rng = jax.random.wrap_key_data(jnp.asarray(resume.jax_key_data))
+            sched.restore(
+                resume.sched_state,
+                [
+                    Event(
+                        time=pe.time,
+                        seq=pe.seq,
+                        kind=pe.kind,
+                        payload=_Completion(pe.group_index, pe.update)
+                        if pe.kind == COMPLETE
+                        else None,
+                    )
+                    for pe in resume.events
+                ],
+            )
+            buffer = list(resume.buffer)
+            ready = collections.deque(int(i) for i in resume.ready)
+            idle = [int(i) for i in resume.idle]
+            in_flight = int(resume.in_flight)
+            drought = int(resume.drought)
+            flush_pending = bool(resume.flush_pending)
+            self.latency_model.load_state_dict(resume.latency_state)
+            stats = {**stats, **resume.stats}
+            history = list(resume.history)
         t_start = time.perf_counter()
         t_last_flush = t_start
+
+        def make_snapshot() -> AsyncFederationSnapshot:
+            return AsyncFederationSnapshot(
+                version=version,
+                params=params,
+                np_rng_state=rng.bit_generator.state,
+                jax_key_data=np.asarray(jax.random.key_data(jax_rng)),
+                sched_state=sched.state_dict(),
+                events=[
+                    PendingEvent(
+                        time=e.time,
+                        seq=e.seq,
+                        kind=e.kind,
+                        group_index=e.payload.group_index
+                        if e.kind == COMPLETE
+                        else None,
+                        update=e.payload.update if e.kind == COMPLETE else None,
+                    )
+                    for e in sched.pending()
+                ],
+                buffer=list(buffer),
+                ready=list(ready),
+                idle=list(idle),
+                in_flight=in_flight,
+                drought=drought,
+                flush_pending=flush_pending,
+                latency_state=self.latency_model.state_dict(),
+                stats=dict(stats),
+                history=list(history),
+            )
 
         def dispatch(group_index: int) -> None:
             """Train one task eagerly and schedule its completion.
@@ -378,6 +641,11 @@ class AsyncFederation:
                 idle.sort()
                 ready.extend(idle)
                 idle.clear()
+                if snapshot_hook is not None:
+                    # The cut point: buffer just flushed, idle requeued,
+                    # nothing dispatched yet — resuming from here and
+                    # continuing are the same next action.
+                    snapshot_hook(make_snapshot())
                 dispatch_ready()
             else:  # pragma: no cover - no other kinds are scheduled
                 raise RuntimeError(f"unknown event kind {event.kind!r}")

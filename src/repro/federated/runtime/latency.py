@@ -58,6 +58,19 @@ class LatencyModel:
         """True when every client always takes the identical time."""
         return False
 
+    def state_dict(self) -> dict:
+        """JSON-serializable model state for checkpoint/resume.
+
+        Stateless models return ``{}``.  Models with lazily-drawn
+        persistent per-client rates must round-trip them: a resumed run's
+        fresh instance would otherwise redraw rates from the restored
+        stream, changing both the rates and every later draw.
+        """
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        pass
+
 
 class DropoutModel:
     """Decides whether one dispatched task fails (no update reaches the server)."""
@@ -151,6 +164,12 @@ class PersistentRateLatency(LatencyModel):
         if cid not in self._rate:
             self._rate[cid] = float(self._draw(rng))
         return self._rate[cid]
+
+    def state_dict(self) -> dict:
+        return {"rate": {str(cid): rate for cid, rate in self._rate.items()}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._rate = {int(cid): float(r) for cid, r in state.get("rate", {}).items()}
 
 
 @register_latency("lognormal")

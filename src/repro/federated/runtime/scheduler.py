@@ -19,6 +19,13 @@ The scheduler knows nothing about federated learning; it stores opaque
 ``(kind, payload)`` pairs and advances ``now`` as events pop.  The policy
 of what each kind means lives in
 :mod:`repro.federated.runtime.async_federation`.
+
+Because the whole timeline is ``(clock, seq counter, heap, one seeded
+stream)``, the scheduler is also trivially *checkpointable*:
+``state_dict`` captures clock/counters/stream and ``restore`` reinstates
+them together with a caller-provided pending-event list (original seqs
+preserved), which is how a preempted async federation resumes with an
+exact virtual clock — same ``now``, same event order, same future draws.
 """
 
 from __future__ import annotations
@@ -106,3 +113,40 @@ class VirtualScheduler:
         self.now = event.time
         self.processed += 1
         return event
+
+    def pending(self) -> list[Event]:
+        """The not-yet-popped events in ``(time, seq)`` order (a copy)."""
+        return [event for _, _, event in sorted(self._heap, key=lambda e: e[:2])]
+
+    def state_dict(self) -> dict:
+        """Clock, counters, and stream state — JSON-serializable.
+
+        Pending events are *not* included (their payloads are arbitrary
+        objects); callers snapshot them via :meth:`pending` and hand them
+        back to :meth:`restore`.
+        """
+        return {
+            "now": self.now,
+            "next_seq": self._next_seq,
+            "processed": self.processed,
+            "rng_state": self.rng.bit_generator.state,
+        }
+
+    def restore(self, state: dict, events: list[Event]) -> None:
+        """Reinstate a snapshot: clock, counters, stream, pending events.
+
+        Events keep their original ``seq`` values, so replayed simultaneity
+        resolves exactly as it would have in the uninterrupted run.
+        """
+        self.now = float(state["now"])
+        self._next_seq = int(state["next_seq"])
+        self.processed = int(state["processed"])
+        self.rng.bit_generator.state = state["rng_state"]
+        self._heap = []
+        for event in events:
+            if event.time < self.now:
+                raise ValueError(
+                    f"restored event {event.kind!r} at t={event.time} is in "
+                    f"the past (now={self.now})"
+                )
+            heapq.heappush(self._heap, (event.time, event.seq, event))

@@ -30,6 +30,13 @@ points at ``AsyncFederation``):
   is ROADMAP scale step (b): the sync two-level ``"hierarchical:R"``
   promoted to stale-tolerant cross-pod combines.  ``R = 1`` degenerates to
   synchronous flat FedAvg (one region == the whole federation).
+
+Checkpoint note: buffered aggregators hold no hidden state between
+flushes — the buffer lives in ``AsyncFederation.run`` and every
+:class:`AsyncUpdate` is a value object (client ids, trained params, the
+anchor version they trained from), which is why an
+``AsyncFederationSnapshot`` can serialize in-flight work by value and a
+resumed run replays the remaining flush sequence bit-identically.
 """
 
 from __future__ import annotations

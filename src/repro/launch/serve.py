@@ -1,4 +1,10 @@
-"""Serving driver: batched autoregressive decode with a KV/state cache.
+"""Decode driver: batched autoregressive *inference* with a KV/state cache.
+
+Naming note: "serve" here means serving *predictions* from a trained
+model — batched greedy decode, tokens/step timings.  The service that
+accepts and runs federated *training jobs* is
+:mod:`repro.launch.federation_service` (the control plane); the two are
+unrelated beyond living in ``repro.launch``.  See the README glossary.
 
 Runs a *reduced* config on CPU end-to-end (prefill via the decode path,
 then batched greedy decode), printing tokens/step timings.  The full-size
