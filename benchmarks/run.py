@@ -256,11 +256,13 @@ def bench_pipeline(
         "facade_overhead": run_facade_overhead(),
     }
     if mesh_auto and jax.device_count() > 1:
-        # Mesh leg runs unchunked (see run_staging_comparison), where the
-        # chunked / no-prefetch variants would duplicate the base ones.
+        # The mesh leg honours cohort_chunk: all-participant chunks are
+        # contiguous resident-row runs, so the static-slice fast path keeps
+        # each shard's rows local instead of the cross-shard gather that
+        # used to force the unchunked fallback here.
         report["shard_map"] = run_staging_comparison(
             rounds=rounds, total_stays=total_stays, cohort_chunk=cohort_chunk,
-            mesh="auto", variants=("rebuild", "resident"),
+            mesh="auto", variants=("rebuild", "rebuild-chunked", "resident"),
         )
     elif mesh_auto:
         emit("pipeline_shard_map_skipped", 0.0, "only one device visible")
@@ -385,6 +387,70 @@ def bench_async(
 
 
 # --------------------------------------------------------------------------
+# population scale: recruitment + rounds from 10^3 to 10^5 clients
+# --------------------------------------------------------------------------
+
+def bench_population(
+    populations: tuple[int, ...] = (1_000, 10_000, 100_000),
+    rounds: int = 3,
+    round_clients: int = 64,
+    pool_rows: int = 256,
+    out_path: str = "BENCH_population.json",
+) -> None:
+    """Population-scale curve: streaming nu-greedy recruitment (ingest pass
+    vs finalize decision, with the exact ``recruit`` as parity oracle) and
+    steady-state round time out of an LRU-pooled device cohort, at each
+    population size.  The report asserts the contract on the way out:
+    participant sets match the oracle at 10^3 (exact-buffer mode), the
+    recruitment decision and the round time grow sub-linearly in population,
+    and ``is_recruited`` membership stays O(1) amortized.  Writes
+    ``BENCH_population.json``.
+    """
+    from repro.experiments.population import run_population_scale
+
+    report = run_population_scale(
+        populations=populations,
+        rounds=rounds,
+        round_clients=round_clients,
+        pool_rows=pool_rows,
+        verbose=False,
+    )
+    for entry in report["entries"]:
+        pop = entry["population"]
+        emit(
+            f"population_{pop}_recruit",
+            1e6 * entry["recruitment_decision_s"],
+            f"mode={entry['streaming_mode']}"
+            f";ingest_us_per_client={entry['recruitment_ingest_us_per_client']:.1f}"
+            f";recruited={entry['num_recruited_streaming']}"
+            + (
+                f";match={entry['participant_match']}"
+                f";jaccard={entry['overlap_jaccard']:.3f}"
+                if "participant_match" in entry
+                else ""
+            ),
+        )
+        emit(
+            f"population_{pop}_round",
+            1e6 * entry["round_time_s"],
+            f"pool_rows={entry['pool_rows']}"
+            f";uploads={entry['pool_uploads_total']}"
+            f";evictions={entry['pool_evictions_total']}",
+        )
+    if "population_ratio" in report:
+        emit(
+            "population_scaling",
+            0.0,
+            f"pop_ratio={report['population_ratio']:.0f}x"
+            f";decision_ratio={report['recruitment_decision_ratio']:.2f}x"
+            f";round_ratio={report['round_time_ratio']:.2f}x"
+            f";sublinear={report['recruitment_sublinear'] and report['round_sublinear']}",
+        )
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}", flush=True)
+
+
+# --------------------------------------------------------------------------
 # kernels
 # --------------------------------------------------------------------------
 
@@ -461,7 +527,7 @@ def main() -> None:
         "--mode",
         choices=[
             "all", "cohort", "kernels", "paper", "paper189", "pipeline",
-            "async", "service",
+            "async", "service", "population",
         ],
         default="all",
         help="'cohort' times sequential vs vectorized federated rounds only; "
@@ -469,7 +535,9 @@ def main() -> None:
         "'pipeline' compares rebuild-per-round vs device-resident staging; "
         "'async' simulates recruited vs all-clients time-to-target-loss "
         "under straggler latency models; 'service' probes the job-service "
-        "envelope vs a direct Federation.run (merged into BENCH_pipeline.json)",
+        "envelope vs a direct Federation.run (merged into BENCH_pipeline.json); "
+        "'population' sweeps streaming recruitment + LRU-pooled rounds from "
+        "10^3 to 10^5 synthetic clients (BENCH_population.json)",
     )
     ap.add_argument("--cohort-clients", type=int, nargs="+", default=[8, 32, 128])
     ap.add_argument("--paper189-rounds", type=int, default=3)
@@ -492,6 +560,16 @@ def main() -> None:
     ap.add_argument(
         "--async-dropout", type=float, default=0.05,
         help="async: per-dispatch client dropout probability",
+    )
+    ap.add_argument(
+        "--population-sizes", type=int, nargs="+",
+        default=[1_000, 10_000, 100_000],
+        help="population: synthetic client counts to sweep (CI uses a "
+        "reduced scale)",
+    )
+    ap.add_argument(
+        "--population-rounds", type=int, default=3,
+        help="population: training rounds per size (round 0 pays compile)",
     )
     ap.add_argument(
         "--mesh-auto", action="store_true",
@@ -520,6 +598,13 @@ def main() -> None:
         return
     if args.mode == "service":
         bench_service(rounds=args.pipeline_rounds)
+        print(f"# total benchmark time: {time.time()-t0:.1f}s")
+        return
+    if args.mode == "population":
+        bench_population(
+            populations=tuple(args.population_sizes),
+            rounds=args.population_rounds,
+        )
         print(f"# total benchmark time: {time.time()-t0:.1f}s")
         return
     if args.mode == "async":

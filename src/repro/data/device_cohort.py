@@ -27,6 +27,7 @@ as ``sample_idx < n_c``.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, Sequence
 
 import numpy as np
@@ -34,6 +35,19 @@ import numpy as np
 from repro.data.pipeline import ClientDataset, cohort_steps_per_epoch
 
 PyTree = Any
+
+_SCATTER = None
+
+
+def _scatter_rows(buf: Any, idx: Any, rows: Any) -> Any:
+    """Jitted in-place row scatter (donated off-CPU, so no full-array copy)."""
+    global _SCATTER
+    if _SCATTER is None:
+        import jax
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        _SCATTER = jax.jit(lambda b, i, r: b.at[i].set(r), donate_argnums=donate)
+    return _SCATTER(buf, idx, rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,9 +103,17 @@ class DeviceCohort:
 
     x: Any                   # jax.Array (rows, max_n + 1, *features)
     y: Any                   # jax.Array (rows, max_n + 1)
-    rows: dict[int, int]     # client_id -> row
-    nbytes: int              # one-time host->device upload size
+    rows: dict[int, int]     # client_id -> row (current residency when pooled)
+    nbytes: int              # resident device bytes (pool bytes when pooled)
     _sources: dict[int, Any] = dataclasses.field(default_factory=dict, repr=False)
+    # -- memory-bounded (LRU pool) mode; None/unused when fully resident ----
+    pool_rows: int | None = None
+    uploads: int = 0
+    evictions: int = 0
+    hits: int = 0
+    bytes_uploaded: int = 0
+    _lru: OrderedDict = dataclasses.field(default_factory=OrderedDict, repr=False)
+    _free: list = dataclasses.field(default_factory=list, repr=False)
 
     @property
     def pad_index(self) -> int:
@@ -101,10 +123,19 @@ class DeviceCohort:
     def num_rows(self) -> int:
         return self.x.shape[0]
 
+    @property
+    def is_pooled(self) -> bool:
+        return self.pool_rows is not None
+
     def row_of(self, client: ClientDataset) -> int:
         try:
             return self.rows[client.client_id]
         except KeyError:
+            if self.is_pooled:
+                raise KeyError(
+                    f"client {client.client_id} is not resident in the pool; "
+                    "call ensure_resident(round_clients) before staging"
+                ) from None
             raise KeyError(
                 f"client {client.client_id} is not part of this device cohort; "
                 "attach the full federation before training"
@@ -114,9 +145,72 @@ class DeviceCohort:
         """True iff this resident copy was built from exactly this dataset."""
         return self._sources.get(client.client_id) is client.train
 
+    def ensure_resident(self, clients: Sequence[ClientDataset]) -> int:
+        """Make every client in ``clients`` resident; returns rows uploaded.
+
+        Pool mode only (a fully resident cohort is a no-op).  Runs once per
+        round on the consumer thread, *before* any plan is staged: rows are
+        then stable for the whole round, so plan prefetch on the staging
+        thread never races an eviction.  Eviction is LRU among clients not in
+        the current round; the pool must hold the round's whole cohort, which
+        is exactly the ``resident_budget_bytes`` contract.
+        """
+        if not self.is_pooled:
+            return 0
+        if len(clients) > self.pool_rows:
+            raise ValueError(
+                f"round cohort of {len(clients)} clients exceeds the resident "
+                f"pool ({self.pool_rows} rows); raise resident_budget_bytes or "
+                "sample fewer clients per round"
+            )
+        wanted = {c.client_id for c in clients}
+        missing: list[ClientDataset] = []
+        for c in clients:
+            if not self.owns(c):
+                raise KeyError(
+                    f"client {c.client_id} was not part of the federation this "
+                    "pool was built for"
+                )
+            if c.client_id in self._lru:
+                self._lru.move_to_end(c.client_id)
+                self.hits += 1
+            else:
+                missing.append(c)
+        if not missing:
+            return 0
+
+        target_rows: list[int] = []
+        for _ in missing:
+            if self._free:
+                target_rows.append(self._free.pop())
+                continue
+            victim = next(cid for cid in self._lru if cid not in wanted)
+            row = self._lru.pop(victim)
+            del self.rows[victim]
+            self.evictions += 1
+            target_rows.append(row)
+
+        max_n = self.pad_index
+        hx = np.zeros((len(missing), max_n + 1, *self.x.shape[2:]), dtype=self.x.dtype)
+        hy = np.zeros((len(missing), max_n + 1), dtype=self.y.dtype)
+        for i, c in enumerate(missing):
+            n = c.n_train
+            hx[i, :n] = c.train.x
+            hy[i, :n] = c.train.y
+            self._lru[c.client_id] = target_rows[i]
+            self.rows[c.client_id] = target_rows[i]
+        idx = np.asarray(target_rows, dtype=np.int32)
+        self.x = _scatter_rows(self.x, idx, hx)
+        self.y = _scatter_rows(self.y, idx, hy)
+        self.uploads += len(missing)
+        self.bytes_uploaded += hx.nbytes + hy.nbytes
+        return len(missing)
+
 
 def build_device_cohort(
-    clients: Sequence[ClientDataset], mesh: Any = None
+    clients: Sequence[ClientDataset],
+    mesh: Any = None,
+    resident_budget_bytes: int | None = None,
 ) -> DeviceCohort:
     """Pad and upload every client's train arrays once.
 
@@ -125,6 +219,14 @@ def build_device_cohort(
     in a ``CohortPlan``.  With a ``mesh`` carrying a ``"data"`` axis the
     row axis is padded to the axis size with all-zero dummy rows and the
     arrays are sharded over it (one ``device_put`` for the whole pytree).
+
+    ``resident_budget_bytes`` bounds device memory for population-scale
+    federations: when the fully baked cohort would exceed the budget, only a
+    pool of ``budget // row_bytes`` rows is allocated and rows are uploaded
+    lazily per round (LRU eviction) via ``ensure_resident`` — a 10^5-client
+    population trains out of a pool sized for its round cohorts instead of
+    one giant array.  The pool is deliberately single-host: combining it
+    with a sharded mesh would re-shard every upload, so that pairing raises.
     """
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -140,10 +242,45 @@ def build_device_cohort(
         shards = int(mesh.shape["data"])
     num_rows = len(clients) + (-len(clients) % shards)
 
+    row_bytes = int(
+        np.prod((max_n + 1, *feat)) * np.dtype(x_dtype).itemsize
+        + (max_n + 1) * np.dtype(y_dtype).itemsize
+    )
+    full_bytes = num_rows * row_bytes
+    if resident_budget_bytes is not None and full_bytes > resident_budget_bytes:
+        if shards > 1:
+            raise ValueError(
+                "resident_budget_bytes pooling is single-host; drop the mesh "
+                "or raise the budget to fit the full cohort"
+            )
+        pool_rows = int(resident_budget_bytes // row_bytes)
+        if pool_rows < 1:
+            raise ValueError(
+                f"resident_budget_bytes={resident_budget_bytes} cannot hold "
+                f"even one client row ({row_bytes} bytes)"
+            )
+        sources: dict[int, Any] = {}
+        for client in clients:
+            if client.train.x.shape[1:] != feat:
+                raise ValueError("all cohort clients must share a feature shape")
+            sources[client.client_id] = client.train
+        hx = np.zeros((pool_rows, max_n + 1, *feat), dtype=x_dtype)
+        hy = np.zeros((pool_rows, max_n + 1), dtype=y_dtype)
+        dx, dy = jax.device_put((hx, hy))
+        return DeviceCohort(
+            x=dx,
+            y=dy,
+            rows={},
+            nbytes=hx.nbytes + hy.nbytes,
+            _sources=sources,
+            pool_rows=pool_rows,
+            _free=list(range(pool_rows - 1, -1, -1)),
+        )
+
     hx = np.zeros((num_rows, max_n + 1, *feat), dtype=x_dtype)
     hy = np.zeros((num_rows, max_n + 1), dtype=y_dtype)
     rows: dict[int, int] = {}
-    sources: dict[int, Any] = {}
+    sources = {}
     for r, client in enumerate(clients):
         if client.train.x.shape[1:] != feat:
             raise ValueError("all cohort clients must share a feature shape")
@@ -220,19 +357,39 @@ def build_cohort_plan(
     )
 
 
-def pad_cohort_plan(plan: CohortPlan, multiple: int) -> CohortPlan:
+def pad_cohort_plan(
+    plan: CohortPlan, multiple: int, num_rows: int | None = None
+) -> CohortPlan:
     """Pad the client axis with weight-0 dummy clients to a multiple.
 
     The plan twin of ``pad_cohort_schedule``: dummy clients point every
     slot at the pad row (so they gather all-zero batches with an all-zero
     mask), have no valid steps, zero weight, and borrow row 0 — every one
     of their steps is a masked no-op, so they change only the array shape.
+
+    When ``num_rows`` (the device cohort's row count) is given and the real
+    rows form a contiguous run with room after it, dummy clients borrow the
+    *continuation* rows instead of row 0: every dummy slot still gathers the
+    pad row (all-zero for every client), so the numbers are bit-identical,
+    but ``client_rows`` stays contiguous and the static-slice fast path in
+    the cohort engine survives padding.
     """
     if multiple <= 1:
         return plan
     pad = -plan.num_clients % multiple
     if pad == 0:
         return plan
+    dummy_rows = np.zeros(pad, np.int32)
+    rows = plan.client_rows
+    if num_rows is not None and rows.size:
+        start = int(rows[0])
+        contiguous = np.array_equal(
+            rows, np.arange(start, start + rows.size, dtype=rows.dtype)
+        )
+        if contiguous and start + rows.size + pad <= num_rows:
+            dummy_rows = np.arange(
+                start + rows.size, start + rows.size + pad, dtype=np.int32
+            )
     return CohortPlan(
         sample_idx=np.concatenate(
             [
@@ -243,7 +400,7 @@ def pad_cohort_plan(plan: CohortPlan, multiple: int) -> CohortPlan:
         step_valid=np.concatenate(
             [plan.step_valid, np.zeros((pad, plan.total_steps), dtype=bool)]
         ),
-        client_rows=np.concatenate([plan.client_rows, np.zeros(pad, np.int32)]),
+        client_rows=np.concatenate([plan.client_rows, dummy_rows]),
         weights=np.concatenate([plan.weights, np.zeros(pad, np.float32)]),
         pad_index=plan.pad_index,
         steps_per_epoch=plan.steps_per_epoch,

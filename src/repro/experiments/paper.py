@@ -409,12 +409,10 @@ def run_staging_comparison(
         from repro.launch.mesh import make_data_mesh
 
         mesh = make_data_mesh() if jax.device_count() > 1 else None
-    if mesh is not None:
-        # Under a data mesh the recommended config is unchunked: the full
-        # cohort's plan rows align shard-for-shard with the resident
-        # arrays (no cross-shard gather), whereas a chunked subset forces
-        # GSPMD to re-gather resident rows across shards every chunk.
-        cohort_chunk = None
+    # Chunking stays on under a mesh: an all-participant round's chunks are
+    # contiguous runs of resident rows, so the engine's static-slice fast
+    # path selects them without the cross-shard gather that used to force
+    # cohort_chunk=None here.
     configs: dict[str, dict[str, Any]] = {
         "rebuild": {"staging": "rebuild", "cohort_chunk": None},
         "rebuild-chunked": {"staging": "rebuild", "cohort_chunk": cohort_chunk},

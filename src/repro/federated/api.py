@@ -720,6 +720,10 @@ class FederationConfig:
     donate_buffers: bool = True
     staging: str = "resident"
     prefetch: bool = True
+    # Population scale: bound the device-resident cohort to this many bytes
+    # (LRU pool of client rows, uploads only the round's sampled clients —
+    # see repro.data.device_cohort).  None = bake the whole federation.
+    resident_budget_bytes: int | None = None
 
     def __post_init__(self) -> None:
         if self.engine not in ENGINES:
@@ -778,6 +782,7 @@ class Federation:
             donate=config.donate_buffers,
             staging=config.staging,
             prefetch=config.prefetch,
+            resident_budget_bytes=config.resident_budget_bytes,
         )
 
     @property

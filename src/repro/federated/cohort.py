@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import sys
 from typing import Any, Callable, Sequence
 
 import jax
@@ -152,6 +153,17 @@ class CohortTrainer:
     # thread while chunk k trains (double buffering).  Only engages when a
     # round has more than one chunk; numerically a no-op either way.
     prefetch: bool = True
+    # Resident staging at population scale: bound the device cohort to this
+    # many bytes.  When the full federation exceeds the budget, client rows
+    # live in an LRU pool and only each round's cohort is uploaded
+    # (repro.data.device_cohort.ensure_resident).  None = bake everything.
+    resident_budget_bytes: int | None = None
+    # Select a chunk whose client_rows are contiguous (and shard-aligned
+    # under a mesh) with a static lax.slice instead of a row gather —
+    # jnp.take with arbitrary indices forces GSPMD into a cross-shard
+    # gather; a static slice partitions natively.  Off only for parity
+    # diffing; numerically identical either way.
+    slice_fastpath: bool = True
     # Sample live-buffer peaks into last_round_stats (two process-wide
     # jax.live_arrays() walks per chunk).  Cheap, but disable on
     # latency-critical loops that never read the stats.
@@ -309,6 +321,25 @@ class CohortTrainer:
             # arrays feed the vmap directly.
             return resident_block(params, acc, x_all, y_all, idx, valid, key_data, weights)
 
+        def cohort_round_resident_slice(
+            params, acc, x_all, y_all, idx, valid, key_data, weights, start
+        ):
+            # Static-slice fast path: this chunk's client rows are the
+            # contiguous run [start, start + C), so select them with a
+            # static lax.slice.  ``start`` is a static argnum (one compile
+            # per distinct chunk offset — a handful, reused every round):
+            # the partitioner sees literal slice bounds and keeps a
+            # shard-aligned chunk local instead of emitting the cross-shard
+            # gather that jnp.take's arbitrary indices force.
+            n = idx.shape[0]
+            x_sel = jax.lax.slice_in_dim(x_all, start, start + n, axis=0)
+            y_sel = jax.lax.slice_in_dim(y_all, start, start + n, axis=0)
+            if mesh is not None:
+                sharding = NamedSharding(mesh, P("data"))
+                x_sel = jax.lax.with_sharding_constraint(x_sel, sharding)
+                y_sel = jax.lax.with_sharding_constraint(y_sel, sharding)
+            return resident_block(params, acc, x_sel, y_sel, idx, valid, key_data, weights)
+
         # Donation layout: the accumulator (argnum 1) aliases in place
         # everywhere; on TPU/GPU the per-round staged buffers are donated
         # too so XLA reuses their memory for round temporaries (XLA:CPU
@@ -335,6 +366,12 @@ class CohortTrainer:
             self._round_full = jax.jit(
                 cohort_round_resident_full, donate_argnums=full_donate
             )
+            # same staged layout as _round_full plus the static slice start
+            self._round_slice = jax.jit(
+                cohort_round_resident_slice,
+                donate_argnums=full_donate,
+                static_argnums=8,
+            )
 
     # ------------------------------------------------------------------
     # staging helpers
@@ -347,9 +384,15 @@ class CohortTrainer:
         ``FederatedServer`` calls this with the (possibly recruited)
         federation before round one; direct ``train_cohort`` callers may
         skip it, in which case the first resident round attaches its own
-        cohort lazily.
+        cohort lazily.  With ``resident_budget_bytes`` set and a federation
+        too large for it, the cohort is an LRU pool and rounds upload only
+        their sampled clients.
         """
-        self._device_cohort = build_device_cohort(clients, mesh=self._data_mesh)
+        self._device_cohort = build_device_cohort(
+            clients,
+            mesh=self._data_mesh,
+            resident_budget_bytes=self.resident_budget_bytes,
+        )
         return self._device_cohort
 
     def _ensure_device_cohort(self, clients: Sequence[ClientDataset]) -> DeviceCohort:
@@ -434,6 +477,13 @@ class CohortTrainer:
         chunk = self.cohort_chunk or len(clients)
         resident = self.staging == "resident"
         dcohort = self._ensure_device_cohort(clients) if resident else None
+        pool_before = (0, 0, 0)
+        if resident and dcohort.is_pooled:
+            # One residency pass per round, before any plan is staged: rows
+            # are then stable for the whole round, so the prefetch thread's
+            # plan building never races an eviction.
+            pool_before = (dcohort.uploads, dcohort.evictions, dcohort.bytes_uploaded)
+            dcohort.ensure_resident(clients)
 
         baseline = live_buffer_stats() if self.track_stats else {"count": 0, "bytes": 0}
         peak = {"count": 0, "bytes": 0}
@@ -445,13 +495,13 @@ class CohortTrainer:
             peak["count"] = max(peak["count"], now["count"] - baseline["count"])
             peak["bytes"] = max(peak["bytes"], now["bytes"] - baseline["bytes"])
 
-        def stage_chunk(start: int) -> tuple[int, float, int, bool, tuple]:
+        def stage_chunk(start: int) -> tuple[int, float, int, tuple, tuple]:
             """Build + upload one chunk's batch data.
 
             Returns (host bytes staged, chunk weight, real client count,
-            full-cohort flag, device args for the round step).  Consumes
-            ``rng`` — must run strictly in chunk order (the
-            StagingPipeline's single ordered producer preserves this).
+            (row-select path, slice start), device args for the round
+            step).  Consumes ``rng`` — must run strictly in chunk order
+            (the StagingPipeline's single ordered producer preserves this).
             """
             part = clients[start : start + chunk]
             if resident:
@@ -465,23 +515,47 @@ class CohortTrainer:
                     pad_index=dcohort.pad_index,
                 )
                 weight = float(plan.weights.sum())
-                plan = pad_cohort_plan(plan, self._num_shards)
+                plan = pad_cohort_plan(plan, self._num_shards, num_rows=dcohort.num_rows)
                 key_data = self._chunk_key_data(
                     all_key_data, start, len(part), plan.num_clients
                 )
-                # Full-cohort fast path: when the chunk is the whole
-                # resident federation in row order (every all-participants
-                # round), skip staging the rows vector and let the round
-                # consume the resident arrays without the row gather.
+                # Row-select path, best first: "full" — the chunk is the
+                # whole resident federation in row order (every
+                # all-participants round), no row select at all; "slice" —
+                # the rows are one contiguous (and, under a mesh,
+                # shard-aligned) run, a static lax.slice; "gather" — the
+                # general jnp.take.
                 full = plan.num_clients == dcohort.num_rows and np.array_equal(
                     plan.client_rows[: len(part)], np.arange(len(part))
                 )
+                kind, r0 = "gather", 0
+                if full:
+                    kind = "full"
+                elif self.slice_fastpath:
+                    r0 = int(plan.client_rows[0])
+                    contiguous = np.array_equal(
+                        plan.client_rows,
+                        np.arange(
+                            r0, r0 + plan.num_clients, dtype=plan.client_rows.dtype
+                        ),
+                    )
+                    aligned = True
+                    if self._num_shards > 1:
+                        rps = dcohort.num_rows // self._num_shards
+                        aligned = (
+                            rps > 0
+                            and r0 % rps == 0
+                            and plan.num_clients % rps == 0
+                        )
+                    if contiguous and aligned:
+                        kind = "slice"
                 host: tuple = (plan.sample_idx, plan.step_valid, plan.weights)
                 to_stage: tuple = (plan.sample_idx, plan.step_valid, key_data, plan.weights)
-                if not full:
+                if kind == "gather":
                     host = (plan.client_rows, *host)
                     to_stage = (plan.client_rows, *to_stage)
                 staged = self._device_put_chunk(to_stage)
+                path = (kind, r0)
             else:
                 sched = build_cohort_schedule(
                     [c.train for c in part],
@@ -497,7 +571,7 @@ class CohortTrainer:
                 key_data = self._chunk_key_data(
                     all_key_data, start, len(part), sched.num_clients
                 )
-                full = False
+                path = ("gather", 0)
                 host = (sched.x, sched.y, sched.mask, sched.step_valid, sched.weights)
                 staged = self._device_put_chunk(
                     (sched.x, sched.y, sched.mask, sched.step_valid, key_data, sched.weights)
@@ -505,7 +579,7 @@ class CohortTrainer:
             nbytes = sum(a.nbytes for a in host)
             if isinstance(key_data, np.ndarray):
                 nbytes += key_data.nbytes
-            return nbytes, weight, len(part), full, staged
+            return nbytes, weight, len(part), path, staged
 
         acc = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.promote_types(p.dtype, jnp.float32)), params
@@ -528,8 +602,9 @@ class CohortTrainer:
         # iteration's first sample() so the plain (non-donated) path's
         # documented two-chunk window is actually observed in the stats.
         held: list[tuple] = []
+        slice_chunks = 0
         try:
-            for start, (nbytes, weight, count, full, args) in zip(starts, staged_chunks):
+            for start, (nbytes, weight, count, path, args) in zip(starts, staged_chunks):
                 total_weight += weight
                 bytes_staged += nbytes
                 # Sampled before the previous chunk's buffers (still
@@ -539,8 +614,18 @@ class CohortTrainer:
                 sample()
                 held.clear()
                 if resident:
-                    step = self._round_full if full else self._round
-                    acc, losses = step(params, acc, dcohort.x, dcohort.y, *args)
+                    kind, r0 = path
+                    if kind == "full":
+                        acc, losses = self._round_full(
+                            params, acc, dcohort.x, dcohort.y, *args
+                        )
+                    elif kind == "slice":
+                        slice_chunks += 1
+                        acc, losses = self._round_slice(
+                            params, acc, dcohort.x, dcohort.y, *args, r0
+                        )
+                    else:
+                        acc, losses = self._round(params, acc, dcohort.x, dcohort.y, *args)
                 else:
                     acc, losses = self._round(params, acc, *args)
                 if self.donate:
@@ -557,7 +642,10 @@ class CohortTrainer:
                 num_chunks += 1
         finally:
             if pipeline is not None:
-                pipeline.close()
+                # Re-raise an uncollected staging exception only when this
+                # round is not already propagating one — close() must never
+                # mask the error that aborted the loop above.
+                pipeline.close(raise_pending=sys.exc_info()[0] is None)
 
         per_losses = np.full(len(clients), np.nan, dtype=np.float32)
         for start, count, losses in chunk_losses:
@@ -566,6 +654,7 @@ class CohortTrainer:
         new_params = jax.tree.map(
             lambda t, ref: (t / total_weight).astype(ref.dtype), acc, params
         )
+        pooled = resident and dcohort.is_pooled
         self.last_round_stats = {
             "chunks": num_chunks,
             "shards": self._num_shards,
@@ -577,6 +666,12 @@ class CohortTrainer:
             "plans_prefetched": pipeline.prefetched if pipeline is not None else 0,
             "peak_live_buffers": peak["count"],
             "peak_live_bytes": peak["bytes"],
+            "slice_chunks": slice_chunks,
+            "pool": pooled,
+            "pool_rows": dcohort.pool_rows if pooled else 0,
+            "pool_uploads": dcohort.uploads - pool_before[0] if pooled else 0,
+            "pool_evictions": dcohort.evictions - pool_before[1] if pooled else 0,
+            "pool_bytes_uploaded": dcohort.bytes_uploaded - pool_before[2] if pooled else 0,
         }
         real_steps = sum(local_round_steps(n, self.batch_size, self.local_epochs) for n in sizes)
         return new_params, per_losses, real_steps

@@ -17,9 +17,12 @@ only overlaps it with the device.
 
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 from typing import Any, Callable, Iterator, Sequence
+
+_LOG = logging.getLogger(__name__)
 
 
 class StagingPipeline:
@@ -43,11 +46,15 @@ class StagingPipeline:
         items: Sequence[Any],
         *,
         depth: int = 1,
+        join_timeout: float = 5.0,
     ) -> None:
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self._stage_fn = stage_fn
         self._items = list(items)
+        self._join_timeout = join_timeout
+        self._pending_exc: BaseException | None = None
+        self.leaked = False
         self._queue: queue.Queue = queue.Queue()
         # The run-ahead bound.  The producer takes a slot BEFORE staging an
         # item and the consumer returns it when the item is handed out, so
@@ -91,19 +98,43 @@ class StagingPipeline:
                 hit = False
             self._slots.release()
             if exc is not None:
-                self.close()
+                # This exception is being delivered right now — close() must
+                # not re-raise it a second time from the drain loop.
+                self.close(raise_pending=False)
                 raise exc
             if hit:
                 self.prefetched += 1
             yield staged
         self.close()
 
-    def close(self) -> None:
-        """Stop the producer and release the queue; idempotent."""
+    def close(self, raise_pending: bool = True) -> None:
+        """Stop the producer and release the queue; idempotent.
+
+        A ``stage_fn`` exception the consumer never collected (it can land in
+        the queue while a round is being torn down) is re-raised here instead
+        of being silently dropped by the drain loop; pass
+        ``raise_pending=False`` from ``except``/``finally`` paths that are
+        already propagating a different error.  A producer thread that fails
+        to join within ``join_timeout`` is logged and flagged on
+        ``self.leaked`` rather than silently abandoned.
+        """
         self._stop.set()
         while True:
             try:
-                self._queue.get_nowait()
+                _, exc = self._queue.get_nowait()
             except queue.Empty:
                 break
-        self._thread.join(timeout=5.0)
+            if exc is not None and self._pending_exc is None:
+                self._pending_exc = exc
+        self._thread.join(timeout=self._join_timeout)
+        if self._thread.is_alive():
+            if not self.leaked:
+                _LOG.warning(
+                    "staging producer thread failed to join within %.1fs; "
+                    "daemon thread leaked (stage_fn stuck?)",
+                    self._join_timeout,
+                )
+            self.leaked = True
+        if raise_pending and self._pending_exc is not None:
+            exc, self._pending_exc = self._pending_exc, None
+            raise exc

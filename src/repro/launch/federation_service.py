@@ -104,6 +104,7 @@ _COMMON_DEFAULTS: dict[str, Any] = {
     "staging": "resident",
     "prefetch": True,
     "donate_buffers": True,
+    "resident_budget_bytes": None,  # null = bake the full cohort resident
     "checkpoint_every": 1,
     "data": None,
     "model": None,
@@ -269,6 +270,11 @@ def federation_config_from_spec(spec: dict):
         donate_buffers=bool(spec["donate_buffers"]),
         staging=spec["staging"],
         prefetch=bool(spec["prefetch"]),
+        resident_budget_bytes=(
+            None
+            if spec["resident_budget_bytes"] is None
+            else int(spec["resident_budget_bytes"])
+        ),
     )
     if spec["mode"] == "sync":
         return FederationConfig(selection=spec["selection"], **common)

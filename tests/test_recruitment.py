@@ -11,7 +11,10 @@ from repro.core.recruitment import (
     BALANCED,
     ClientStats,
     RecruitmentConfig,
+    StreamingRecruiter,
+    StreamingRecruitmentConfig,
     recruit,
+    recruit_streaming,
     recruitment_curve,
     representativeness,
 )
@@ -121,9 +124,17 @@ GAMMA_PAIRS = st.tuples(
 
 
 def make_stats_sized(population):
-    """ClientStats with independently drawn histogram and sample size."""
+    """ClientStats with independently drawn histogram and sample size.
+
+    ``n`` is clamped up to the histogram mass (a client can have unlabeled
+    stays — mass < n — but never more counts than stays), so the n^-1/2 term
+    is still exercised independently of the histogram shape."""
     return [
-        ClientStats(client_id=i, counts=np.asarray(c, dtype=np.int64), n=int(n))
+        ClientStats(
+            client_id=i,
+            counts=np.asarray(c, dtype=np.int64),
+            n=max(int(n), int(np.sum(c))),
+        )
         for i, (c, n) in enumerate(population)
     ]
 
@@ -256,3 +267,171 @@ def test_invalid_configs_raise():
         RecruitmentConfig(gamma_dv=-1.0)
     with pytest.raises(ValueError):
         ClientStats(client_id=0, counts=np.ones(10), n=0)
+
+
+# --------------------------------------------------------------------------
+# disclosure validation + mass-normalized divergence (bugfix regressions)
+# --------------------------------------------------------------------------
+
+def test_counts_exceeding_n_rejected():
+    # a histogram can never count more stays than the client reports having
+    with pytest.raises(ValueError, match="exceeds reported n"):
+        ClientStats(client_id=3, counts=np.full(10, 2), n=4)
+    # fewer is fine: stays may lack an LoS label
+    ClientStats(client_id=3, counts=np.full(10, 2), n=40)
+
+
+def test_divergence_normalized_by_histogram_mass():
+    """Two clients with the *same* LoS distribution must get the same
+    divergence term even if one has unlabeled stays (mass < n).  The old
+    code divided by n, under-scaling the partially-labeled client's p_local
+    so it no longer summed to 1 and its divergence was biased upward."""
+    shape = np.array([30, 10, 5, 3, 2, 0, 0, 0, 0, 0])
+    fully = ClientStats(client_id=0, counts=shape, n=int(shape.sum()))
+    partial = ClientStats(client_id=1, counts=shape, n=int(shape.sum()) * 2)
+    nu = representativeness([fully, partial], RecruitmentConfig(gamma_dv=1.0, gamma_sa=0.0))
+    assert nu[0] == pytest.approx(nu[1], abs=1e-12)
+
+
+# --------------------------------------------------------------------------
+# threshold-crossing edges (bugfix regressions)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [3, 4, 5, 7])
+def test_exact_tie_recruits_through_crossing_only(n):
+    """iota landing exactly on a cumulative boundary recruits up to and
+    including the crossing client — never one past it.  With gamma_dv=0 and
+    identical sizes every nu equals n^-1/2, so gamma_th=0.4 over 10 clients
+    makes the 4th prefix an exact mathematical tie with iota; irrational
+    nu values (n=3,5,7) exercise the float-rounding side of the tie."""
+    shape = np.array([5, 3, 2, 0, 0, 0, 0, 0, 0, 0])
+    stats = [ClientStats(client_id=i, counts=shape * n, n=int(shape.sum()) * n) for i in range(10)]
+    cfg = RecruitmentConfig(gamma_dv=0.0, gamma_sa=1.0, gamma_th=0.4)
+    res = recruit(stats, cfg)
+    assert res.num_recruited == 4
+
+
+def test_full_threshold_with_zero_nu_population():
+    """All-identical distributions with gamma_sa=0 give nu == 0 everywhere;
+    gamma_th=1.0 must still recruit the whole population (the old crossing
+    logic found iota=0 at the first client and recruited exactly one)."""
+    shape = np.array([4, 3, 2, 1, 0, 0, 0, 0, 0, 0])
+    stats = [ClientStats(client_id=i, counts=shape, n=int(shape.sum())) for i in range(25)]
+    res = recruit(stats, RecruitmentConfig(gamma_dv=1.0, gamma_sa=0.0, gamma_th=1.0))
+    assert res.num_recruited == 25
+    assert res.nu_g == 0.0
+
+
+def test_is_recruited_matches_isin():
+    rng = np.random.default_rng(11)
+    stats = make_stats([rng.integers(1, 100, NUM_BINS) for _ in range(60)])
+    res = recruit(stats, BALANCED)
+    for cid in res.client_ids:
+        assert res.is_recruited(int(cid)) == bool(np.isin(cid, res.recruited_ids))
+    assert not res.is_recruited(10_000)
+
+
+# --------------------------------------------------------------------------
+# streaming recruitment (population scale)
+# --------------------------------------------------------------------------
+
+def random_population(num, seed=0, lo=1, hi=400):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(num):
+        n = int(rng.integers(lo, hi))
+        counts = rng.multinomial(n, rng.dirichlet(np.full(NUM_BINS, 0.7)))
+        out.append(ClientStats(client_id=i, counts=counts, n=n))
+    return out
+
+
+def test_streaming_exact_parity_at_paper_scale():
+    """Populations within the exact buffer (default 1024 >= 10^3) delegate
+    to the exact oracle: identical participant sets, nu_g, and iota."""
+    stats = random_population(1000, seed=5)
+    exact = recruit(stats, BALANCED)
+    streamed = recruit_streaming(iter(stats), BALANCED)
+    assert streamed.mode == "exact"
+    assert sorted(streamed.recruited_ids.tolist()) == sorted(exact.recruited_ids.tolist())
+    assert streamed.nu_g == pytest.approx(exact.nu_g, rel=0, abs=0)
+    assert streamed.iota == pytest.approx(exact.iota, rel=0, abs=0)
+    assert streamed.clients_seen == 1000
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_streaming_sketch_tolerance(seed):
+    """Above the exact buffer the sketch path carries a tolerance contract:
+    num_recruited within a few percent of the exact oracle and the
+    participant sets nearly identical (pool candidates are re-scored
+    exactly; only the iota estimate moves the cutoff)."""
+    stats = random_population(3000, seed=seed)
+    exact = recruit(stats, BALANCED)
+    streamed = recruit_streaming(
+        iter(stats),
+        BALANCED,
+        stream=StreamingRecruitmentConfig(exact_buffer=200, pool_size=3000),
+    )
+    assert streamed.mode == "sketch"
+    assert not streamed.pool_exhausted
+    rel = abs(streamed.num_recruited - exact.num_recruited) / exact.num_recruited
+    assert rel <= 0.05
+    overlap = len(set(streamed.recruited_ids) & set(exact.recruited_ids))
+    assert overlap / exact.num_recruited >= 0.9
+    # the sketch's independent count estimate lands in the same ballpark
+    assert abs(streamed.estimated_num_recruited - exact.num_recruited) <= 0.15 * exact.num_recruited
+
+
+def test_streaming_order_robust():
+    """The sketch decision may move the cutoff by a few clients across
+    presentation orders, but stays within the tolerance contract."""
+    stats = random_population(2500, seed=9)
+    base = recruit_streaming(
+        iter(stats), BALANCED,
+        stream=StreamingRecruitmentConfig(exact_buffer=128, pool_size=2500),
+    )
+    perm = np.random.default_rng(0).permutation(len(stats))
+    shuffled = recruit_streaming(
+        (stats[int(i)] for i in perm), BALANCED,
+        stream=StreamingRecruitmentConfig(exact_buffer=128, pool_size=2500),
+    )
+    rel = abs(base.num_recruited - shuffled.num_recruited) / base.num_recruited
+    assert rel <= 0.05
+
+
+def test_streaming_gamma_th_one_recruits_everyone():
+    stats = random_population(600, seed=3)
+    cfg = RecruitmentConfig(gamma_dv=0.5, gamma_sa=0.5, gamma_th=1.0)
+    streamed = recruit_streaming(
+        iter(stats), cfg, stream=StreamingRecruitmentConfig(exact_buffer=64, pool_size=32)
+    )
+    assert streamed.mode == "sketch"
+    assert sorted(streamed.recruited_ids.tolist()) == list(range(600))
+
+
+def test_streaming_pool_exhaustion_flagged():
+    """A pool too small to hold the iota crossing truncates num_recruited —
+    that must be flagged and warned about, never silent."""
+    stats = random_population(800, seed=4)
+    with pytest.warns(UserWarning, match="pool"):
+        streamed = recruit_streaming(
+            iter(stats), BALANCED,
+            stream=StreamingRecruitmentConfig(exact_buffer=32, pool_size=24),
+        )
+    assert streamed.pool_exhausted
+    assert streamed.num_recruited == 24
+
+
+def test_streaming_recruiter_lifecycle():
+    stats = random_population(50, seed=6)
+    rec = StreamingRecruiter(BALANCED)
+    rec.extend(stats)
+    first = rec.finalize()
+    assert rec.finalize() is first          # idempotent
+    with pytest.raises(RuntimeError):
+        rec.observe(stats[0])               # sealed after finalize
+    with pytest.raises(ValueError):
+        StreamingRecruiter(BALANCED).finalize()  # empty stream
+    assert first.is_recruited(int(first.recruited_ids[0]))
+    excluded = set(range(50)) - set(first.recruited_ids.tolist())
+    if excluded:
+        assert not first.is_recruited(next(iter(excluded)))
