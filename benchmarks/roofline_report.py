@@ -1,12 +1,21 @@
 """Aggregate the dry-run sweep into the EXPERIMENTS.md roofline tables.
 
     PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+
+Also renders the training-kernel section from ``BENCH_kernels.json``
+(``benchmarks/run.py --mode kernels``), where the paper's GRU-eICU shape is
+a first-class row next to the LM shape — and asserts the structural claim
+that the residual backward contains no forward-recompute scan.
+
+Missing results directories, incomplete records, and arch names outside the
+known order are skipped with a warning instead of raising.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
@@ -17,6 +26,13 @@ ARCH_ORDER = [
     "llama4-scout-17b-a16e", "zamba2-7b",
 ]
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# Kernel-tier rows (BENCH_kernels.json keys), GRU-eICU first-class.
+KERNEL_ROW_ORDER = ["gru-eicu", "mamba2-lm"]
+
+
+def warn(msg: str) -> None:
+    print(f"[roofline_report] warning: {msg}", file=sys.stderr, flush=True)
 
 
 def fmt_s(x: float) -> str:
@@ -38,13 +54,42 @@ def fmt_bytes(x: float) -> str:
     return f"{x:.0f}B"
 
 
+_ROOFLINE_KEYS = ("compute_s", "memory_s", "collective_s", "dominant", "coll_bytes")
+
+
 def load(mesh: str, variant: str = "baseline") -> dict[tuple[str, str], dict]:
-    out = {}
+    out: dict[tuple[str, str], dict] = {}
+    if not RESULTS.exists():
+        warn(f"results dir {RESULTS} missing — run repro.launch.dryrun first")
+        return out
     for f in RESULTS.glob(f"*__{mesh}__{variant}.json"):
-        rec = json.loads(f.read_text())
-        if "roofline" in rec:
-            out[(rec["arch"], rec["shape"])] = rec
+        try:
+            rec = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            warn(f"skipping unreadable record {f.name}: {exc}")
+            continue
+        roofline = rec.get("roofline")
+        if not isinstance(roofline, dict):
+            continue
+        missing = [k for k in _ROOFLINE_KEYS if k not in roofline]
+        if missing or "arch" not in rec or "shape" not in rec:
+            warn(f"skipping incomplete record {f.name} (missing {missing or 'arch/shape'})")
+            continue
+        out[(rec["arch"], rec["shape"])] = rec
     return out
+
+
+def _row(arch: str, shape: str, rec: dict) -> str:
+    r = rec["roofline"]
+    mem = rec.get("memory", {})
+    per_dev = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+    useful = r.get("useful_flops_ratio")
+    useful_s = f"{useful:.3f}" if useful is not None else "-"
+    return (
+        f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+        f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** | {useful_s} "
+        f"| {fmt_bytes(per_dev)} | {fmt_bytes(r['coll_bytes'])} |"
+    )
 
 
 def table(mesh: str, variant: str = "baseline") -> str:
@@ -53,37 +98,34 @@ def table(mesh: str, variant: str = "baseline") -> str:
         "| arch | shape | compute | memory | collective | dominant | useful FLOPs | bytes/dev | coll bytes |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
+    known = set()
     for arch in ARCH_ORDER:
         for shape in SHAPE_ORDER:
+            known.add((arch, shape))
             rec = recs.get((arch, shape))
             if rec is None:
                 rows.append(f"| {arch} | {shape} | - | - | - | MISSING | - | - | - |")
                 continue
-            r = rec["roofline"]
-            mem = rec["memory"]
-            per_dev = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0))
-            useful = r["useful_flops_ratio"]
-            rows.append(
-                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
-                f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
-                f"| {useful:.3f} | {fmt_bytes(per_dev)} | {fmt_bytes(r['coll_bytes'])} |"
-                if useful is not None else
-                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
-                f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** | - "
-                f"| {fmt_bytes(per_dev)} | {fmt_bytes(r['coll_bytes'])} |"
-            )
+            rows.append(_row(arch, shape, rec))
+    # Records outside the known grid render at the bottom instead of
+    # silently disappearing (previously dropped; unknown keys KeyError'd).
+    for key in sorted(recs.keys() - known):
+        warn(f"arch/shape {key} not in the known order — appending")
+        rows.append(_row(*key, recs[key]))
     return "\n".join(rows)
 
 
 def summary(mesh: str) -> str:
     recs = load(mesh)
-    dom = {}
+    if not recs:
+        return f"mesh={mesh}: no dry-run records found"
+    dom: dict[str, int] = {}
     for rec in recs.values():
         dom[rec["roofline"]["dominant"]] = dom.get(rec["roofline"]["dominant"], 0) + 1
     lines = [f"mesh={mesh}: {len(recs)} pairs compiled; dominance: {dom}"]
     # worst useful-flops ratio and most collective-bound
     ranked = sorted(
-        (r for r in recs.values() if r["roofline"]["useful_flops_ratio"]),
+        (r for r in recs.values() if r["roofline"].get("useful_flops_ratio")),
         key=lambda r: r["roofline"]["useful_flops_ratio"],
     )
     if ranked:
@@ -98,14 +140,82 @@ def summary(mesh: str) -> str:
     return "\n".join(lines)
 
 
+def kernels_table(bench_path: Path) -> str:
+    """Training-kernel tier from BENCH_kernels.json: fwd / bwd / local-step
+    timings per backward pairing, plus the recompute-elimination check."""
+    if not bench_path.exists():
+        warn(f"{bench_path} missing — run benchmarks/run.py --mode kernels")
+        return "(no kernel benchmark data)"
+    try:
+        bench = json.loads(bench_path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        warn(f"unreadable {bench_path}: {exc}")
+        return "(no kernel benchmark data)"
+
+    rows = [
+        "| shape | pass | oracle-vjp | residual | pallas | speedup (resid/oracle) |",
+        "|---|---|---|---|---|---|",
+    ]
+    us = lambda v: f"{v/1e3:.2f}ms" if v >= 1e3 else f"{v:.0f}us"
+    eliminated = []
+    for name in KERNEL_ROW_ORDER:
+        fam = bench.get(name)
+        if not isinstance(fam, dict):
+            warn(f"kernel family {name!r} missing from {bench_path.name}")
+            continue
+        bwd = fam.get("bwd_us", {})
+        step = fam.get("local_step_us", {})
+        fwd = fam.get("fwd_us", {})
+        if bwd.get("oracle_vjp") and bwd.get("residual_jnp"):
+            speedup = f"{bwd['oracle_vjp'] / bwd['residual_jnp']:.2f}x"
+        else:
+            speedup = "-"
+        rows.append(
+            f"| {name} | fwd | - | {us(fwd.get('jnp_ref', 0))} (jnp) "
+            f"| {us(fwd.get('pallas_interpret', 0))} | |"
+        )
+        rows.append(
+            f"| {name} | bwd | {us(bwd.get('oracle_vjp', 0))} "
+            f"| {us(bwd.get('residual_jnp', 0))} "
+            f"| {us(bwd.get('pallas_interpret', 0))} | {speedup} |"
+        )
+        rows.append(
+            f"| {name} | local step | {us(step.get('oracle_vjp', 0))} "
+            f"| {us(step.get('residual', 0))} | - | |"
+        )
+        rec = fam.get("recompute", {})
+        eliminated.append(bool(rec.get("recompute_eliminated")))
+        res_scans = rec.get("residual_bwd", {}).get("scans")
+        orc_scans = rec.get("oracle_bwd", {}).get("scans")
+        rows.append(
+            f"| {name} | bwd scan sites | {orc_scans} | {res_scans} | 0 (in-kernel loop) | |"
+        )
+
+    # The structural claim this tier exists for: no second forward scan.
+    assert eliminated and all(eliminated), (
+        "residual backward still contains a forward-recompute scan — "
+        f"see 'recompute' sections of {bench_path}"
+    )
+    rows.append("")
+    rows.append("recompute check: residual backward has no forward-recompute scan ✓")
+    return "\n".join(rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument(
+        "--kernels", default="BENCH_kernels.json",
+        help="path to the kernels benchmark output (skipped with a warning "
+        "when absent)",
+    )
     args = ap.parse_args()
     print(table(args.mesh, args.variant))
     print()
     print(summary(args.mesh))
+    print()
+    print(kernels_table(Path(args.kernels)))
 
 
 if __name__ == "__main__":

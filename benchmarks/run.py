@@ -454,45 +454,184 @@ def bench_population(
 # kernels
 # --------------------------------------------------------------------------
 
-def bench_kernels() -> None:
+def bench_kernels(
+    *,
+    reps: int = 5,
+    gru_batch: int = 128,
+    lm_seq: int = 256,
+    lm_heads: int = 4,
+    out_path: str = "BENCH_kernels.json",
+) -> None:
+    """Training-grade kernel tier: fwd / bwd / local-step timings.
+
+    Compares three backward pairings at the paper's GRU-eICU shape and a
+    mamba2-130m-derived LM shape (head_dim/d_state from the zoo config,
+    heads and sequence scaled for CPU interpret mode):
+
+      oracle_vjp    — old pairing: backward recomputes the forward through
+                      the jnp oracle, then transposes it
+      residual_jnp  — new default off-TPU: single reverse scan over stashed
+                      residuals, no forward recompute
+      pallas_bwd    — the hand-written backward kernel (interpret mode here,
+                      Mosaic-compiled on TPU)
+
+    Also embeds the jaxpr recompute-elimination report (scan sites + FLOP
+    accounting of the backward-only graph).  Writes ``BENCH_kernels.json``.
+    """
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels.gru_scan.kernel import gru_scan
-    from repro.kernels.gru_scan.ref import gru_scan_ref
-    from repro.kernels.ssd.ops import ssd_full
-    from repro.kernels.ssd.ref import ssd_ref
+    from repro.configs.gru_eicu import CONFIG as GRU_EICU
+    from repro.configs.mamba2_130m import CONFIG as MAMBA_LM
+    from repro.kernels.analysis import recompute_elimination_report
+    from repro.kernels.gru_scan.kernel import gru_scan, gru_scan_bwd
+    from repro.kernels.gru_scan.ops import gru_scan_op, gru_scan_oracle
+    from repro.kernels.gru_scan.ref import gru_scan_bwd_ref, gru_scan_ref
+    from repro.kernels.ssd.kernel import ssd_chunk_scan_bwd
+    from repro.kernels.ssd.ops import ssd_chunk_scan, ssd_chunk_scan_oracle
+    from repro.kernels.ssd.ref import (
+        ssd_chunk_scan_bwd_ref,
+        ssd_chunk_scan_ref,
+        ssd_chunk_states_ref,
+    )
 
     rng = np.random.default_rng(0)
 
-    def timeit(fn, *args, reps: int = 5) -> float:
+    def timeit(fn, *args) -> float:
         jax.block_until_ready(fn(*args))  # warmup / compile
         t0 = time.perf_counter()
         for _ in range(reps):
             jax.block_until_ready(fn(*args))
         return 1e6 * (time.perf_counter() - t0) / reps
 
-    # paper-shaped GRU layer (batch 128, 24h, N=32)
-    xg = jnp.asarray(rng.normal(size=(128, 24, 96)), jnp.float32)
-    whh = jnp.asarray(rng.normal(size=(32, 96)) * 0.3, jnp.float32)
-    bhh = jnp.zeros(96)
-    err = float(jnp.max(jnp.abs(gru_scan(xg, whh, bhh) - gru_scan_ref(xg, whh, bhh))))
-    emit("kernel_gru_scan_interp", timeit(gru_scan, xg, whh, bhh), f"maxerr={err:.2e}")
-    emit("kernel_gru_ref", timeit(jax.jit(gru_scan_ref), xg, whh, bhh), "oracle")
+    def grad_fn(op, argnums):
+        return jax.jit(jax.grad(lambda *a: jnp.sum(op(*a) ** 2), argnums=argnums))
 
-    # mamba2-130m-shaped SSD chunk (scaled down for CPU)
-    b, s, h, p, n = 2, 256, 8, 32, 64
-    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
-    dt = jax.nn.softplus(jnp.asarray(rng.normal(size=(b, s, h)), jnp.float32))
-    a = -jnp.exp(jnp.asarray(rng.normal(size=(h,)) * 0.5, jnp.float32))
-    bm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
-    cm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
-    run_kernel = lambda: ssd_full(x, dt, a, bm, cm, chunk=64)
-    run_ref = jax.jit(lambda: ssd_ref(x, dt, a, bm, cm))
-    err = float(jnp.max(jnp.abs(run_kernel() - run_ref())))
-    emit("kernel_ssd_interp", timeit(run_kernel), f"maxerr={err:.2e}")
-    emit("kernel_ssd_ref", timeit(run_ref), "oracle")
+    report: dict = {"bench": "kernels", "backend": jax.default_backend(), "reps": reps}
+
+    # ---- GRU at the paper's eICU shape (hidden from repro.configs) -------
+    t_len, n_hid = 24, GRU_EICU.hidden_dim
+    xg = jnp.asarray(rng.normal(size=(gru_batch, t_len, 3 * n_hid)), jnp.float32)
+    whh = jnp.asarray(rng.normal(size=(n_hid, 3 * n_hid)) * 0.3, jnp.float32)
+    bhh = jnp.zeros(3 * n_hid)
+    dy = jnp.asarray(rng.normal(size=(gru_batch, t_len, n_hid)), jnp.float32)
+    h_seq = gru_scan_ref(xg, whh, bhh)
+
+    err_fwd = float(jnp.max(jnp.abs(gru_scan(xg, whh, bhh) - h_seq)))
+    _, oracle_vjp = jax.vjp(gru_scan_ref, xg, whh, bhh)
+    g_oracle = oracle_vjp(dy)
+    maxerr = lambda got: max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, g_oracle)
+    )
+    jit_oracle_bwd = jax.jit(lambda ct: jax.vjp(gru_scan_ref, xg, whh, bhh)[1](ct))
+    jit_resid_bwd = jax.jit(gru_scan_bwd_ref)
+    pallas_bwd = lambda: gru_scan_bwd(xg, whh, bhh, h_seq, dy, interpret=True)
+
+    gru = {
+        "shape": {"batch": gru_batch, "seq": t_len, "hidden": n_hid},
+        "fwd_us": {
+            "pallas_interpret": timeit(gru_scan, xg, whh, bhh),
+            "jnp_ref": timeit(jax.jit(gru_scan_ref), xg, whh, bhh),
+        },
+        "bwd_us": {
+            "oracle_vjp": timeit(jit_oracle_bwd, dy),
+            "residual_jnp": timeit(jit_resid_bwd, xg, whh, bhh, h_seq, dy),
+            "pallas_interpret": timeit(pallas_bwd),
+        },
+        "local_step_us": {
+            "oracle_vjp": timeit(grad_fn(gru_scan_oracle, (0, 1, 2)), xg, whh, bhh),
+            "residual": timeit(grad_fn(gru_scan_op, (0, 1, 2)), xg, whh, bhh),
+            "jnp_autodiff": timeit(grad_fn(gru_scan_ref, (0, 1, 2)), xg, whh, bhh),
+        },
+        "maxerr": {
+            "fwd": err_fwd,
+            "bwd_residual_vs_oracle": maxerr(jit_resid_bwd(xg, whh, bhh, h_seq, dy)),
+            "bwd_pallas_vs_oracle": maxerr(pallas_bwd()),
+        },
+        "recompute": recompute_elimination_report(
+            gru_scan_op, gru_scan_oracle, xg, whh, bhh
+        ),
+    }
+    report["gru-eicu"] = gru
+    emit("kernel_gru_fwd_interp", gru["fwd_us"]["pallas_interpret"], f"maxerr={err_fwd:.2e}")
+    for path, us in gru["bwd_us"].items():
+        emit(f"kernel_gru_bwd_{path}", us, "")
+    for path, us in gru["local_step_us"].items():
+        emit(f"kernel_gru_step_{path}", us, "")
+
+    # ---- SSD at a mamba2-130m-derived LM shape ---------------------------
+    s_cfg = MAMBA_LM.ssm
+    b, s, h, p, n = 2, lm_seq, lm_heads, s_cfg.head_dim, s_cfg.d_state
+    chunk = min(64, s)
+    nc = s // chunk
+    xc = jnp.asarray(rng.normal(size=(b, nc, chunk, h, p)), jnp.float32)
+    dtc = jax.nn.softplus(jnp.asarray(rng.normal(size=(b, nc, chunk, h)), jnp.float32))
+    a_dec = -jnp.exp(jnp.asarray(rng.normal(size=(h,)) * 0.5, jnp.float32))
+    cum = jnp.cumsum(dtc * a_dec[None, None, None, :], axis=2)
+    bm = jnp.asarray(rng.normal(size=(b, nc, chunk, n)) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, nc, chunk, n)) * 0.5, jnp.float32)
+    dyc = jnp.asarray(rng.normal(size=(b, nc, chunk, h, p)), jnp.float32)
+    ssd_args = (xc, dtc, cum, bm, cm)
+
+    y_ref = ssd_chunk_scan_ref(*ssd_args)
+    states = ssd_chunk_states_ref(*ssd_args)
+    err_fwd = float(jnp.max(jnp.abs(ssd_chunk_scan(*ssd_args) - y_ref)))
+    _, oracle_vjp = jax.vjp(ssd_chunk_scan_ref, *ssd_args)
+    g_oracle = oracle_vjp(dyc)
+    maxerr = lambda got: max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, g_oracle)
+    )
+    jit_oracle_bwd = jax.jit(lambda ct: jax.vjp(ssd_chunk_scan_ref, *ssd_args)[1](ct))
+    jit_resid_bwd = jax.jit(ssd_chunk_scan_bwd_ref)
+    pallas_bwd = lambda: ssd_chunk_scan_bwd(*ssd_args, states, dyc, interpret=True)
+    fwd_kernel = lambda: ssd_chunk_scan(*ssd_args)
+
+    ssd = {
+        "shape": {
+            "arch": MAMBA_LM.name, "batch": b, "seq": s, "heads": h,
+            "head_dim": p, "d_state": n, "chunk": chunk,
+        },
+        "fwd_us": {
+            "pallas_interpret": timeit(fwd_kernel),
+            "jnp_ref": timeit(jax.jit(ssd_chunk_scan_ref), *ssd_args),
+        },
+        "bwd_us": {
+            "oracle_vjp": timeit(jit_oracle_bwd, dyc),
+            "residual_jnp": timeit(jit_resid_bwd, *ssd_args, states, dyc),
+            "pallas_interpret": timeit(pallas_bwd),
+        },
+        "local_step_us": {
+            "oracle_vjp": timeit(grad_fn(ssd_chunk_scan_oracle, (0, 1, 3, 4)), *ssd_args),
+            "residual": timeit(grad_fn(ssd_chunk_scan, (0, 1, 3, 4)), *ssd_args),
+            "jnp_autodiff": timeit(grad_fn(ssd_chunk_scan_ref, (0, 1, 3, 4)), *ssd_args),
+        },
+        "maxerr": {
+            "fwd": err_fwd,
+            "bwd_residual_vs_oracle": maxerr(jit_resid_bwd(*ssd_args, states, dyc)),
+            "bwd_pallas_vs_oracle": maxerr(pallas_bwd()),
+        },
+        "recompute": recompute_elimination_report(
+            ssd_chunk_scan, ssd_chunk_scan_oracle, *ssd_args
+        ),
+    }
+    report["mamba2-lm"] = ssd
+    emit("kernel_ssd_fwd_interp", ssd["fwd_us"]["pallas_interpret"], f"maxerr={err_fwd:.2e}")
+    for path, us in ssd["bwd_us"].items():
+        emit(f"kernel_ssd_bwd_{path}", us, "")
+    for path, us in ssd["local_step_us"].items():
+        emit(f"kernel_ssd_step_{path}", us, "")
+
+    report["recompute_eliminated"] = bool(
+        gru["recompute"]["recompute_eliminated"]
+        and ssd["recompute"]["recompute_eliminated"]
+    )
+    assert report["recompute_eliminated"], (
+        "residual backward still contains a forward-recompute scan: "
+        f"gru={gru['recompute']}, ssd={ssd['recompute']}"
+    )
+    emit("kernel_recompute_eliminated", 0.0, report["recompute_eliminated"])
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 
 
 # --------------------------------------------------------------------------
@@ -575,6 +714,23 @@ def main() -> None:
         "--mesh-auto", action="store_true",
         help="paper189/pipeline: shard the client axis over all visible devices",
     )
+    ap.add_argument(
+        "--kernel-reps", type=int, default=5,
+        help="kernels: timed repetitions per path (CI uses a reduced count)",
+    )
+    ap.add_argument(
+        "--kernel-gru-batch", type=int, default=128,
+        help="kernels: GRU-eICU batch size (paper default 128)",
+    )
+    ap.add_argument(
+        "--kernel-lm-seq", type=int, default=256,
+        help="kernels: LM-shape sequence length (chunked at 64)",
+    )
+    ap.add_argument(
+        "--kernel-lm-heads", type=int, default=4,
+        help="kernels: LM-shape head count (mamba2-130m head_dim/d_state, "
+        "heads reduced for CPU interpret mode)",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -618,7 +774,12 @@ def main() -> None:
     if args.mode in ("all", "cohort"):
         bench_cohort(client_counts=tuple(args.cohort_clients))
     if args.mode in ("all", "kernels"):
-        bench_kernels()
+        bench_kernels(
+            reps=args.kernel_reps,
+            gru_batch=args.kernel_gru_batch,
+            lm_seq=args.kernel_lm_seq,
+            lm_heads=args.kernel_lm_heads,
+        )
         bench_roofline()
     if args.mode in ("all", "paper") and not args.skip_paper:
         bench_paper_tables(args.scale, args.seeds)

@@ -260,6 +260,7 @@ def run_paper_scale(
     engines: tuple[str, ...] = ("vectorized", "sequential"),
     mesh: Any = None,
     settings: tuple[str, ...] = PAPER_SCALE_SETTINGS,
+    use_pallas: bool = False,
     verbose: bool = True,
 ) -> dict[str, Any]:
     """The paper's full five-setting grid at 189 clients, under both engines.
@@ -281,6 +282,7 @@ def run_paper_scale(
         central_epochs=rounds * local_epochs,
         batch_size=batch_size,
         mesh=mesh,
+        use_pallas=use_pallas,
     )
 
     report: dict[str, Any] = {}

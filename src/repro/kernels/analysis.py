@@ -1,0 +1,103 @@
+"""Jaxpr op accounting for the kernel tier.
+
+The point of the residual backward is structural: the cotangent pass must
+be a *single* reverse scan, not recompute-forward-then-transpose.  That
+claim is checkable from the jaxpr — count ``scan`` sites, ``dot_general``
+FLOPs, and weighted primitive totals in the backward graph and compare the
+residual pairing against the oracle-recompute pairing.
+
+``backward_stats`` builds ``jax.vjp(fn, *args)`` and walks the jaxpr of the
+cotangent application (forward residuals are baked in as constants, so only
+backward work is counted).  ``recompute_elimination_report`` packages the
+comparison the benchmarks and the roofline report assert on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from math import prod
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class OpStats:
+    """Weighted op counts for one jaxpr (loop bodies scaled by trip count)."""
+
+    scans: int = 0              # scan *sites* (a second site = a recompute pass)
+    while_loops: int = 0
+    pallas_calls: int = 0
+    dot_general_flops: float = 0.0
+    weighted_eqns: float = 0.0  # primitives × loop trip counts — total op traffic
+
+    def as_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = prod(lhs.shape[i] for i in lb)
+    k = prod(lhs.shape[i] for i in lc)
+    m = prod(lhs.shape[i] for i in range(len(lhs.shape)) if i not in lc and i not in lb)
+    n = prod(rhs.shape[i] for i in range(len(rhs.shape)) if i not in rc and i not in rb)
+    return 2.0 * batch * m * n * k
+
+
+def _walk(jaxpr, stats: OpStats, mult: float) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        stats.weighted_eqns += mult
+        if name == "dot_general":
+            stats.dot_general_flops += mult * _dot_flops(eqn)
+        elif name == "scan":
+            stats.scans += 1
+            _walk(eqn.params["jaxpr"].jaxpr, stats, mult * eqn.params["length"])
+        elif name == "while":
+            stats.while_loops += 1
+            _walk(eqn.params["cond_jaxpr"].jaxpr, stats, mult)
+            _walk(eqn.params["body_jaxpr"].jaxpr, stats, mult)
+        elif name == "cond":
+            for branch in eqn.params["branches"]:
+                _walk(branch.jaxpr, stats, mult)
+        elif "pallas_call" in name:
+            stats.pallas_calls += 1
+        else:
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                sub = eqn.params.get(key)
+                if sub is not None:
+                    _walk(getattr(sub, "jaxpr", sub), stats, mult)
+
+
+def backward_stats(fn: Callable, *args) -> OpStats:
+    """Op stats of the *backward-only* graph of ``fn`` at ``args``."""
+    out, vjp_fn = jax.vjp(fn, *args)
+    cotangent = jax.tree_util.tree_map(jnp.ones_like, out)
+    closed = jax.make_jaxpr(vjp_fn)(cotangent)
+    stats = OpStats()
+    _walk(closed.jaxpr, stats, 1.0)
+    return stats
+
+
+def recompute_elimination_report(
+    residual_fn: Callable, oracle_fn: Callable, *args
+) -> dict[str, Any]:
+    """Compare residual vs oracle backward graphs at the same inputs.
+
+    ``recompute_eliminated`` is the structural claim: the residual backward
+    has strictly fewer scan passes than the oracle (no second forward scan)
+    and no more total op traffic.
+    """
+    residual = backward_stats(residual_fn, *args)
+    oracle = backward_stats(oracle_fn, *args)
+    eliminated = (
+        residual.scans < oracle.scans
+        and residual.weighted_eqns <= oracle.weighted_eqns
+    )
+    return {
+        "residual_bwd": residual.as_dict(),
+        "oracle_bwd": oracle.as_dict(),
+        "recompute_eliminated": bool(eliminated),
+    }

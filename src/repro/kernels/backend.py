@@ -1,0 +1,54 @@
+"""Shared backend selection for the Pallas kernel tier.
+
+Both kernel families (``gru_scan``, ``ssd``) need the same three decisions,
+previously copy-pasted as private ``_on_tpu()`` probes:
+
+* ``on_tpu()``      — is the default JAX backend a real TPU?
+* ``interpret()``   — should ``pallas_call`` run in interpret mode?  True
+  off-TPU (CPU containers, CI) so the same kernel source stays executable
+  everywhere; on TPU the Mosaic compiler takes over.
+* ``pallas_backward()`` — should the *backward* pass use the hand-written
+  Pallas kernel (True on TPU) or the pure-jnp residual reverse scan (the
+  off-TPU default, which is faster than interpret-mode emulation on CPU)?
+
+The ``REPRO_PALLAS_INTERPRET`` environment variable overrides both
+``interpret()`` and ``pallas_backward()`` to True, forcing every path —
+including the backward kernels — through interpret-mode ``pallas_call`` on
+any backend.  CI uses this to exercise the backward kernels without TPU
+hardware; it is read at trace time, so set it before the first jit.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
+_TRUTHY = frozenset({"1", "true", "yes", "on"})
+
+
+def _env_forced() -> bool:
+    return os.environ.get(_ENV_INTERPRET, "").strip().lower() in _TRUTHY
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def interpret() -> bool:
+    """Interpret-mode flag for ``pallas_call`` (True off-TPU or when forced)."""
+    if _env_forced():
+        return True
+    return not on_tpu()
+
+
+def pallas_backward() -> bool:
+    """Route the backward pass through the Pallas backward kernel?
+
+    True on TPU (compiled Mosaic) or when ``REPRO_PALLAS_INTERPRET`` forces
+    interpret-mode coverage; otherwise False and the pure-jnp residual
+    reverse scan runs instead.
+    """
+    return on_tpu() or _env_forced()

@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the fused GRU recurrence kernel."""
+"""Pure-jnp oracle for the fused GRU recurrence kernel.
+
+``gru_scan_ref`` is the forward oracle.  ``gru_scan_bwd_ref`` is the
+hand-derived residual backward: given the forward's own hidden-state
+sequence as the residual, one reverse-time ``lax.scan`` produces all three
+cotangents — no forward recompute, unlike the ``jax.vjp(gru_scan_ref, ...)``
+oracle pairing it replaces on the hot path.
+"""
 
 from __future__ import annotations
 
@@ -24,3 +31,64 @@ def gru_scan_ref(x_gates: jnp.ndarray, w_hh: jnp.ndarray, b_hh: jnp.ndarray) -> 
     h0 = jnp.zeros((b, n), dtype=jnp.float32)
     _, h_seq = jax.lax.scan(step, h0, jnp.swapaxes(x_gates, 0, 1))
     return jnp.swapaxes(h_seq, 0, 1).astype(x_gates.dtype)
+
+
+def gru_scan_bwd_ref(
+    x_gates: jnp.ndarray,  # (B, T, 3N) forward input
+    w_hh: jnp.ndarray,     # (N, 3N)
+    b_hh: jnp.ndarray,     # (3N,)
+    h_seq: jnp.ndarray,    # (B, T, N)  forward output (the residual)
+    dy: jnp.ndarray,       # (B, T, N)  output cotangent
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Residual backward: one reverse scan, zero forward recompute.
+
+    Gates are rebuilt per step from ``h_{t-1}`` (read out of ``h_seq``) —
+    one (B, N) @ (N, 3N) matmul, the same cost the forward paid, instead of
+    rerunning the whole forward scan and then transposing it.
+    Returns ``(dx_gates, dw_hh, db_hh)``.
+    """
+    b, t, three_n = x_gates.shape
+    n = three_n // 3
+    w32 = w_hh.astype(jnp.float32)
+    b32 = b_hh.astype(jnp.float32)
+    h32 = h_seq.astype(jnp.float32)
+    h_prev_seq = jnp.concatenate(
+        [jnp.zeros((b, 1, n), dtype=jnp.float32), h32[:, :-1]], axis=1
+    )
+
+    def step(carry, inputs):
+        dh, dw, db = carry
+        gx, h_prev, dy_t = inputs                       # (B,3N), (B,N), (B,N)
+        gh = h_prev @ w32 + b32
+        xr, xz, xn = jnp.split(gx.astype(jnp.float32), 3, axis=-1)
+        hr, hz, hn = jnp.split(gh, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        cand = jnp.tanh(xn + r * hn)
+
+        dh_total = dy_t.astype(jnp.float32) + dh
+        dz = dh_total * (h_prev - cand)
+        da_n = dh_total * (1.0 - z) * (1.0 - cand * cand)
+        da_r = da_n * hn * r * (1.0 - r)
+        da_z = dz * z * (1.0 - z)
+        d_gx = jnp.concatenate([da_r, da_z, da_n], axis=-1)           # (B, 3N)
+        d_gh = jnp.concatenate([da_r, da_z, da_n * r], axis=-1)       # (B, 3N)
+
+        dh_new = dh_total * z + d_gh @ w32.T
+        dw_new = dw + h_prev.T @ d_gh
+        db_new = db + d_gh.sum(axis=0)
+        return (dh_new, dw_new, db_new), d_gx
+
+    carry0 = (
+        jnp.zeros((b, n), dtype=jnp.float32),
+        jnp.zeros((n, three_n), dtype=jnp.float32),
+        jnp.zeros((three_n,), dtype=jnp.float32),
+    )
+    xs = (
+        jnp.swapaxes(x_gates, 0, 1),
+        jnp.swapaxes(h_prev_seq, 0, 1),
+        jnp.swapaxes(dy, 0, 1),
+    )
+    (_, dw_hh, db_hh), d_gx_seq = jax.lax.scan(step, carry0, xs, reverse=True)
+    dx_gates = jnp.swapaxes(d_gx_seq, 0, 1).astype(x_gates.dtype)
+    return dx_gates, dw_hh.astype(w_hh.dtype), db_hh.astype(b_hh.dtype)

@@ -68,7 +68,22 @@ def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, out_ref, state_ref):
     state_ref[...] = state_new
 
 
-@functools.partial(jax.jit, static_argnames=("h_tile", "interpret"))
+def _ssd_kernel_with_states(
+    x_ref, dt_ref, cum_ref, b_ref, c_ref, out_ref, entry_ref, state_ref
+):
+    """Forward that additionally records the chunk-entry state S_k — the
+    residual the hand-written backward consumes."""
+    chunk_idx = pl.program_id(2)
+
+    @pl.when(chunk_idx == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    entry_ref[0, 0] = state_ref[...].astype(entry_ref.dtype)
+    _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, out_ref, state_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("h_tile", "interpret", "return_states"))
 def ssd_chunk_scan(
     x: jnp.ndarray,      # (B, NC, L, H, P) fp32
     dt: jnp.ndarray,     # (B, NC, L, H)
@@ -78,16 +93,32 @@ def ssd_chunk_scan(
     *,
     h_tile: int = 4,
     interpret: bool = True,
-) -> jnp.ndarray:
-    """Returns y (B, NC, L, H, P)."""
+    return_states: bool = False,
+):
+    """Returns y (B, NC, L, H, P); with ``return_states`` also the fp32
+    chunk-entry states (B, NC, H, P, N)."""
     batch, nc, l_len, h, p = x.shape
     n = b_mat.shape[-1]
     h_tile = min(h_tile, h)
     assert h % h_tile == 0, f"h_tile {h_tile} must divide head count {h}"
     ht_tiles = h // h_tile
 
+    y_spec = pl.BlockSpec((1, 1, l_len, h_tile, p), lambda b, hh, c: (b, c, 0, hh, 0))
+    y_shape = jax.ShapeDtypeStruct((batch, nc, l_len, h, p), x.dtype)
+    if return_states:
+        kernel = _ssd_kernel_with_states
+        out_specs = [
+            y_spec,
+            pl.BlockSpec((1, 1, h_tile, p, n), lambda b, hh, c: (b, c, hh, 0, 0)),
+        ]
+        out_shape = [y_shape, jax.ShapeDtypeStruct((batch, nc, h, p, n), jnp.float32)]
+    else:
+        kernel = _ssd_kernel
+        out_specs = y_spec
+        out_shape = y_shape
+
     return pl.pallas_call(
-        _ssd_kernel,
+        kernel,
         grid=(batch, ht_tiles, nc),               # chunks innermost: sequential state
         in_specs=[
             pl.BlockSpec((1, 1, l_len, h_tile, p), lambda b, hh, c: (b, c, 0, hh, 0)),
@@ -96,8 +127,130 @@ def ssd_chunk_scan(
             pl.BlockSpec((1, 1, l_len, n), lambda b, hh, c: (b, c, 0, 0)),
             pl.BlockSpec((1, 1, l_len, n), lambda b, hh, c: (b, c, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, l_len, h_tile, p), lambda b, hh, c: (b, c, 0, hh, 0)),
-        out_shape=jax.ShapeDtypeStruct((batch, nc, l_len, h, p), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((h_tile, p, n), jnp.float32)],
         interpret=interpret,
     )(x, dt, cum, b_mat, c_mat)
+
+
+def _ssd_bwd_kernel(
+    x_ref, dt_ref, cum_ref, b_ref, c_ref, s_ref, dy_ref,
+    dx_ref, ddt_ref, dcum_ref, db_ref, dc_ref, ds_ref,
+):
+    """Reverse-chunk backward for one batch element, full head dim.
+
+    The grid walks chunks last-to-first (index maps flip the chunk axis), so
+    the dS carry lives in VMEM scratch exactly like the forward's state.
+    Head tiling is dropped: dB/dC are shared across heads, and splitting
+    heads across grid steps would interleave non-consecutive revisits of
+    those output blocks — full-H blocks keep every output written once.
+    """
+    chunk_idx = pl.program_id(1)
+
+    @pl.when(chunk_idx == 0)
+    def _reset():  # first visit = last chunk: final state has no cotangent
+        ds_ref[...] = jnp.zeros_like(ds_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, H, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L, H)
+    cum = cum_ref[0, 0].astype(jnp.float32)      # (L, H)
+    b_mat = b_ref[0, 0].astype(jnp.float32)      # (L, N)
+    c_mat = c_ref[0, 0].astype(jnp.float32)      # (L, N)
+    s_k = s_ref[0, 0].astype(jnp.float32)        # (H, P, N) chunk-entry state
+    dy = dy_ref[0, 0].astype(jnp.float32)        # (L, H, P)
+    ds = ds_ref[...]                             # (H, P, N) carry
+
+    l_len = x.shape[0]
+    idx = jax.lax.iota(jnp.int32, l_len)
+    causal = idx[:, None] >= idx[None, :]
+
+    cb = jnp.dot(c_mat, b_mat.T, preferred_element_type=jnp.float32)    # (L, L)
+    diff = cum[:, None, :] - cum[None, :, :]                            # (L, L, H)
+    decay = jnp.exp(jnp.where(causal[:, :, None], diff, -1e30))
+
+    # intra-chunk quadratic form transpose
+    w = cb[:, :, None] * decay * dt[None, :, :]
+    dw = jnp.einsum("lhp,mhp->lmh", dy, x)
+    dx = jnp.einsum("lmh,lhp->mhp", w, dy)
+    dcb = jnp.einsum("lmh,lmh->lm", dw, decay * dt[None, :, :])
+    ddt = jnp.einsum("lmh->mh", dw * cb[:, :, None] * decay)
+    term = dw * cb[:, :, None] * dt[None, :, :] * decay
+    dcum = term.sum(axis=1) - term.sum(axis=0)
+    dc = jnp.dot(dcb, b_mat, preferred_element_type=jnp.float32)
+    db = jnp.dot(dcb.T, c_mat, preferred_element_type=jnp.float32)
+
+    # inter-chunk carried-state contribution
+    sd = jnp.exp(cum)
+    d_cs = dy * sd[:, :, None]
+    dc += jnp.einsum("lhp,hpn->ln", d_cs, s_k)
+    ds_from_y = jnp.einsum("lhp,ln->hpn", d_cs, c_mat)
+    y_inter = jnp.einsum("ln,hpn->lhp", c_mat, s_k) * sd[:, :, None]
+    dcum += jnp.einsum("lhp,lhp->lh", dy, y_inter)
+
+    # state-update transpose
+    cd = jnp.exp(cum[-1, :])
+    indec = jnp.exp(cum[-1:, :] - cum) * dt
+    ds_in = ds * cd[:, None, None] + ds_from_y
+    g = jnp.einsum("hpn,ln,lhp->lh", ds, b_mat, x)
+    db += jnp.einsum("hpn,lh,lhp->ln", ds, indec, x)
+    dx += jnp.einsum("hpn,ln,lh->lhp", ds, b_mat, indec)
+    ddt += g * jnp.exp(cum[-1:, :] - cum)
+    dcum -= g * indec
+    last = jnp.einsum("hpn,hpn->h", ds, s_k) * cd + (g * indec).sum(axis=0)
+    dcum = dcum.at[-1, :].add(last)
+
+    dx_ref[0, 0] = dx.astype(dx_ref.dtype)
+    ddt_ref[0, 0] = ddt.astype(ddt_ref.dtype)
+    dcum_ref[0, 0] = dcum.astype(dcum_ref.dtype)
+    db_ref[0, 0] = db.astype(db_ref.dtype)
+    dc_ref[0, 0] = dc.astype(dc_ref.dtype)
+    ds_ref[...] = ds_in
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_scan_bwd(
+    x: jnp.ndarray,       # (B, NC, L, H, P)
+    dt: jnp.ndarray,      # (B, NC, L, H)
+    cum: jnp.ndarray,     # (B, NC, L, H)
+    b_mat: jnp.ndarray,   # (B, NC, L, N)
+    c_mat: jnp.ndarray,   # (B, NC, L, N)
+    states: jnp.ndarray,  # (B, NC, H, P, N) fp32 chunk-entry states
+    dy: jnp.ndarray,      # (B, NC, L, H, P)
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, ...]:
+    """Single-pass Pallas backward: ``(dx, ddt, dcum, db, dc)``."""
+    batch, nc, l_len, h, p = x.shape
+    n = b_mat.shape[-1]
+    rev = lambda c: nc - 1 - c
+
+    return pl.pallas_call(
+        _ssd_bwd_kernel,
+        grid=(batch, nc),                         # chunks innermost, reversed
+        in_specs=[
+            pl.BlockSpec((1, 1, l_len, h, p), lambda b, c: (b, rev(c), 0, 0, 0)),
+            pl.BlockSpec((1, 1, l_len, h), lambda b, c: (b, rev(c), 0, 0)),
+            pl.BlockSpec((1, 1, l_len, h), lambda b, c: (b, rev(c), 0, 0)),
+            pl.BlockSpec((1, 1, l_len, n), lambda b, c: (b, rev(c), 0, 0)),
+            pl.BlockSpec((1, 1, l_len, n), lambda b, c: (b, rev(c), 0, 0)),
+            pl.BlockSpec((1, 1, h, p, n), lambda b, c: (b, rev(c), 0, 0, 0)),
+            pl.BlockSpec((1, 1, l_len, h, p), lambda b, c: (b, rev(c), 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l_len, h, p), lambda b, c: (b, rev(c), 0, 0, 0)),
+            pl.BlockSpec((1, 1, l_len, h), lambda b, c: (b, rev(c), 0, 0)),
+            pl.BlockSpec((1, 1, l_len, h), lambda b, c: (b, rev(c), 0, 0)),
+            pl.BlockSpec((1, 1, l_len, n), lambda b, c: (b, rev(c), 0, 0)),
+            pl.BlockSpec((1, 1, l_len, n), lambda b, c: (b, rev(c), 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(dt.shape, dt.dtype),
+            jax.ShapeDtypeStruct(cum.shape, cum.dtype),
+            jax.ShapeDtypeStruct(b_mat.shape, b_mat.dtype),
+            jax.ShapeDtypeStruct(c_mat.shape, c_mat.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, cum, b_mat, c_mat, states, dy)

@@ -1,8 +1,17 @@
 """Jitted public wrapper for the SSD Pallas kernel.
 
-Accepts the chunked layout produced by ``repro.models.mamba2`` and forces
-interpret mode off-TPU.  ``ssd_full`` is the convenience entry point taking
-an unchunked sequence (used by tests to sweep shapes against the oracle).
+Accepts the chunked layout produced by ``repro.models.mamba2``; backend
+selection (interpret mode, backward routing, ``REPRO_PALLAS_INTERPRET``)
+lives in ``repro.kernels.backend``.  ``ssd_full`` is the convenience entry
+point taking an unchunked sequence (used by tests to sweep shapes against
+the oracle).
+
+``pallas_call`` has no reverse-mode rule, so the op carries a
+``custom_vjp``.  The forward stashes the chunk-entry states S_k as the
+residual; the backward is then one reverse pass over chunks — the
+hand-written Pallas kernel on TPU, the pure-jnp ``ssd_chunk_scan_bwd_ref``
+reverse scan elsewhere.  The previous oracle-recompute pairing is kept as
+``ssd_chunk_scan_oracle`` purely for benchmarking.
 """
 
 from __future__ import annotations
@@ -10,12 +19,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend
 from repro.kernels.ssd.kernel import ssd_chunk_scan as _kernel
-from repro.kernels.ssd.ref import ssd_chunk_scan_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.ssd.kernel import ssd_chunk_scan_bwd as _kernel_bwd
+from repro.kernels.ssd.ref import ssd_chunk_scan_bwd_ref, ssd_chunk_scan_ref
 
 
 def _pick_h_tile(h: int) -> int:
@@ -27,25 +34,60 @@ def _pick_h_tile(h: int) -> int:
 
 @jax.custom_vjp
 def ssd_chunk_scan(xc, dtc, cum, bc, cc):
-    """Chunked inputs (B, NC, L, ...) -> y (B, NC, L, H, P).
-
-    Forward: Pallas kernel.  Backward: recompute through the jnp oracle
-    (``pallas_call`` has no reverse-mode rule) — remat-style custom_vjp.
-    """
+    """Chunked inputs (B, NC, L, ...) -> y (B, NC, L, H, P)."""
     h = xc.shape[3]
-    return _kernel(xc, dtc, cum, bc, cc, h_tile=_pick_h_tile(h), interpret=not _on_tpu())
+    return _kernel(
+        xc, dtc, cum, bc, cc, h_tile=_pick_h_tile(h), interpret=backend.interpret()
+    )
 
 
 def _fwd(xc, dtc, cum, bc, cc):
-    return ssd_chunk_scan(xc, dtc, cum, bc, cc), (xc, dtc, cum, bc, cc)
+    h = xc.shape[3]
+    y, states = _kernel(
+        xc,
+        dtc,
+        cum,
+        bc,
+        cc,
+        h_tile=_pick_h_tile(h),
+        interpret=backend.interpret(),
+        return_states=True,
+    )
+    return y, (xc, dtc, cum, bc, cc, states)
 
 
 def _bwd(residuals, cotangent):
+    xc, dtc, cum, bc, cc, states = residuals
+    if backend.pallas_backward():
+        return _kernel_bwd(
+            xc, dtc, cum, bc, cc, states, cotangent, interpret=backend.interpret()
+        )
+    return ssd_chunk_scan_bwd_ref(xc, dtc, cum, bc, cc, states, cotangent)
+
+
+ssd_chunk_scan.defvjp(_fwd, _bwd)
+
+
+@jax.custom_vjp
+def ssd_chunk_scan_oracle(xc, dtc, cum, bc, cc):
+    """The pre-residual pairing (benchmark baseline only): Pallas forward,
+    backward recomputes the whole forward through the jnp oracle."""
+    h = xc.shape[3]
+    return _kernel(
+        xc, dtc, cum, bc, cc, h_tile=_pick_h_tile(h), interpret=backend.interpret()
+    )
+
+
+def _oracle_fwd(xc, dtc, cum, bc, cc):
+    return ssd_chunk_scan_oracle(xc, dtc, cum, bc, cc), (xc, dtc, cum, bc, cc)
+
+
+def _oracle_bwd(residuals, cotangent):
     _, vjp = jax.vjp(ssd_chunk_scan_ref, *residuals)
     return vjp(cotangent)
 
 
-ssd_chunk_scan.defvjp(_fwd, _bwd)
+ssd_chunk_scan_oracle.defvjp(_oracle_fwd, _oracle_bwd)
 
 
 def ssd_full(

@@ -77,3 +77,105 @@ def ssd_chunk_scan_ref(
     state0 = jnp.zeros((b, h, p, bc.shape[-1]), dtype=jnp.float32)
     _, ys = jax.lax.scan(body, state0, (f32(xc), f32(dtc), f32(cum), f32(bc), f32(cc)))
     return jnp.moveaxis(ys, 0, 1).astype(xc.dtype)
+
+
+def ssd_chunk_states_ref(
+    xc: jnp.ndarray,
+    dtc: jnp.ndarray,
+    cum: jnp.ndarray,
+    bc: jnp.ndarray,
+    cc: jnp.ndarray,
+) -> jnp.ndarray:
+    """Chunk-entry states S_k (B, NC, H, P, N) — the residual the backward
+    consumes.  S_0 = 0; S_{k+1} = S_k * exp(cum_k[-1]) + sum_l B_l (indec_l x_l)."""
+    b, nc, l_len, h, p = xc.shape
+    n = bc.shape[-1]
+
+    def body(state, inputs):
+        x_k, dt_k, cum_k, b_k = inputs
+        entry = state
+        chunk_decay = jnp.exp(cum_k[:, -1, :])
+        in_decay = jnp.exp(cum_k[:, -1:, :] - cum_k) * dt_k
+        state = state * chunk_decay[:, :, None, None] + jnp.einsum(
+            "bln,blh,blhp->bhpn", b_k, in_decay, x_k
+        )
+        return state, entry
+
+    f32 = lambda a: jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+    state0 = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    _, entries = jax.lax.scan(body, state0, (f32(xc), f32(dtc), f32(cum), f32(bc)))
+    return jnp.moveaxis(entries, 0, 1)  # (B, NC, H, P, N) fp32
+
+
+def ssd_chunk_scan_bwd_ref(
+    xc: jnp.ndarray,      # (B, NC, L, H, P)
+    dtc: jnp.ndarray,     # (B, NC, L, H)
+    cum: jnp.ndarray,     # (B, NC, L, H)
+    bc: jnp.ndarray,      # (B, NC, L, N)
+    cc: jnp.ndarray,      # (B, NC, L, N)
+    states: jnp.ndarray,  # (B, NC, H, P, N) chunk-entry states (residual)
+    dy: jnp.ndarray,      # (B, NC, L, H, P) output cotangent
+) -> tuple[jnp.ndarray, ...]:
+    """Residual backward: one reverse scan over chunks, no forward recompute.
+
+    Treats ``cum`` as an independent input (callers' cumsum transposes via
+    JAX).  Returns ``(dxc, ddtc, dcum, dbc, dcc)``.
+    """
+    b, nc, l_len, h, p = xc.shape
+    idx = jnp.arange(l_len)
+    causal = idx[:, None] >= idx[None, :]
+
+    def body(ds_carry, inputs):
+        x_k, dt_k, cum_k, b_k, c_k, s_k, dy_k = inputs
+        cb = jnp.einsum("bln,bmn->blm", c_k, b_k)
+        diff = cum_k[:, :, None, :] - cum_k[:, None, :, :]
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
+
+        # intra-chunk quadratic form
+        w = cb[:, :, :, None] * decay * dt_k[:, None, :, :]
+        dw = jnp.einsum("blhp,bmhp->blmh", dy_k, x_k)
+        dx = jnp.einsum("blmh,blhp->bmhp", w, dy_k)
+        dcb = jnp.einsum("blmh,blmh->blm", dw, decay * dt_k[:, None, :, :])
+        ddt = jnp.einsum("blmh->bmh", dw * cb[:, :, :, None] * decay)
+        term = dw * cb[:, :, :, None] * dt_k[:, None, :, :] * decay
+        dcum_k = term.sum(axis=2) - term.sum(axis=1)
+        dc = jnp.einsum("blm,bmn->bln", dcb, b_k)
+        db = jnp.einsum("blm,bln->bmn", dcb, c_k)
+
+        # inter-chunk: carried-state contribution
+        sd = jnp.exp(cum_k)
+        d_cs = dy_k * sd[:, :, :, None]
+        dc = dc + jnp.einsum("blhp,bhpn->bln", d_cs, s_k)
+        ds_from_y = jnp.einsum("blhp,bln->bhpn", d_cs, c_k)
+        y_inter = jnp.einsum("bln,bhpn->blhp", c_k, s_k) * sd[:, :, :, None]
+        dcum_k = dcum_k + jnp.einsum("blhp,blhp->blh", dy_k, y_inter)
+
+        # state-update transpose
+        cd = jnp.exp(cum_k[:, -1, :])
+        indec = jnp.exp(cum_k[:, -1:, :] - cum_k) * dt_k
+        ds_in = ds_carry * cd[:, :, None, None] + ds_from_y
+        g = jnp.einsum("bhpn,bln,blhp->blh", ds_carry, b_k, x_k)
+        db = db + jnp.einsum("bhpn,blh,blhp->bln", ds_carry, indec, x_k)
+        dx = dx + jnp.einsum("bhpn,bln,blh->blhp", ds_carry, b_k, indec)
+        ddt = ddt + g * jnp.exp(cum_k[:, -1:, :] - cum_k)
+        dcum_k = dcum_k - g * indec
+        last = jnp.einsum("bhpn,bhpn->bh", ds_carry, s_k) * cd + (g * indec).sum(axis=1)
+        dcum_k = dcum_k.at[:, -1, :].add(last)
+        return ds_in, (dx, ddt, dcum_k, db, dc)
+
+    f32 = lambda a: jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+    ds0 = jnp.zeros((b, h, p, bc.shape[-1]), dtype=jnp.float32)
+    _, (dxs, ddts, dcums, dbs, dcs) = jax.lax.scan(
+        body,
+        ds0,
+        (f32(xc), f32(dtc), f32(cum), f32(bc), f32(cc), f32(states), f32(dy)),
+        reverse=True,
+    )
+    unstack = lambda a, like: jnp.moveaxis(a, 0, 1).astype(like.dtype)
+    return (
+        unstack(dxs, xc),
+        unstack(ddts, dtc),
+        unstack(dcums, cum),
+        unstack(dbs, bc),
+        unstack(dcs, cc),
+    )

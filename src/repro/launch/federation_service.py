@@ -233,6 +233,13 @@ def validate_job_spec(spec: dict) -> dict:
         raise ValueError(
             f"checkpoint_every must be >= 1, got {out['checkpoint_every']}"
         )
+    if not isinstance(out["model"]["use_pallas"], bool):
+        # bool() would truthy-coerce "false" to True — reject anything but
+        # a JSON boolean before it reaches the kernel-path switch.
+        raise ValueError(
+            "model.use_pallas must be a JSON boolean (true/false), "
+            f"got {out['model']['use_pallas']!r}"
+        )
     if not (float(out["data"]["scale"]) > 0):
         raise ValueError(f"data.scale must be > 0, got {out['data']['scale']}")
     if out["mesh"] not in (None, "auto"):

@@ -128,6 +128,29 @@ def test_spec_hash_is_canonical_and_sensitive():
     assert job_spec_hash(validate_job_spec(changed)) != job_spec_hash(a)
 
 
+def test_model_use_pallas_round_trips_through_spec_hash():
+    out = validate_job_spec(copy.deepcopy(SYNC_SPEC))
+    assert out["model"]["use_pallas"] is False  # default off
+
+    flagged = copy.deepcopy(SYNC_SPEC)
+    flagged["model"]["use_pallas"] = True
+    a = validate_job_spec(flagged)
+    assert a["model"]["use_pallas"] is True
+    # Kernel path is part of job identity, and re-validating the
+    # normalized spec is a fixed point of the hash.
+    assert job_spec_hash(a) != job_spec_hash(out)
+    assert job_spec_hash(validate_job_spec(copy.deepcopy(a))) == job_spec_hash(a)
+    # Explicit default hashes the same as omitted.
+    explicit = copy.deepcopy(SYNC_SPEC)
+    explicit["model"]["use_pallas"] = False
+    assert job_spec_hash(validate_job_spec(explicit)) == job_spec_hash(out)
+
+    with pytest.raises(ValueError, match="use_pallas must be a JSON boolean"):
+        validate_job_spec({"mode": "sync", "model": {"use_pallas": "false"}})
+    with pytest.raises(ValueError, match="did you mean 'use_pallas'"):
+        validate_job_spec({"mode": "sync", "model": {"use_palas": True}})
+
+
 def test_paper_settings_render_as_valid_job_specs():
     from repro.experiments.paper import ExperimentConfig, job_spec_for
 
