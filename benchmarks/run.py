@@ -451,6 +451,102 @@ def bench_population(
 
 
 # --------------------------------------------------------------------------
+# privacy: DP-SGD and secure-aggregation per-round overhead
+# --------------------------------------------------------------------------
+
+def bench_privacy(
+    rounds: int = 3,
+    total_stays: int = 189 * 8,
+    noise_multiplier: float = 1.0,
+    out_path: str = "BENCH_privacy.json",
+) -> None:
+    """Privacy-tier cost at the paper's 189 clients, baseline in-file.
+
+    For each staging mode the grid runs the unprotected federation and the
+    in-jit DP-SGD federation under both engines (per-example clipping +
+    noise ride the jitted round, so the interesting number is the
+    steady-state per-round overhead), plus one masked-sum secure
+    aggregation run — secagg's stacked mode forces the sequential engine,
+    so its overhead is reported against the sequential baseline of the
+    same staging.  DP rows carry the accountant's final epsilon.  Writes
+    ``BENCH_privacy.json`` with every baseline next to its protected run.
+    """
+    import jax
+    import numpy as np
+
+    from repro.data.pipeline import build_client_datasets
+    from repro.data.synth_eicu import generate_cohort
+    from repro.experiments.paper import paper_scale_cohort_config
+    from repro.federated.api import Federation, FederationConfig
+    from repro.models.gru import GRUConfig, init_gru, make_loss_fn
+    from repro.optim.adamw import AdamW
+    from repro.privacy.dp import DPConfig
+
+    cohort = generate_cohort(paper_scale_cohort_config(total_stays), seed=0)
+    clients = build_client_datasets(cohort)
+    model_cfg = GRUConfig()
+    loss_fn = make_loss_fn(model_cfg)
+    optimizer = AdamW(learning_rate=5e-3, weight_decay=5e-3)
+    params0 = init_gru(jax.random.key(0), model_cfg)
+    dp = DPConfig(clip_norm=1.0, noise_multiplier=noise_multiplier)
+
+    def one(engine: str, staging: str, privacy=None, aggregator="fedavg"):
+        cfg = FederationConfig(
+            rounds=rounds, local_epochs=1, batch_size=128,
+            aggregator=aggregator, seed=0, engine=engine, staging=staging,
+            privacy=privacy,
+        )
+        fed = Federation(cfg, clients, loss_fn, optimizer)
+        result = fed.run(params0)
+        times = [r.wall_time_s for r in result.history]
+        steady = float(np.mean(times[1:])) if len(times) > 1 else float(times[0])
+        return {
+            "round_time_s": steady,
+            "effective_engine": fed.effective_engine,
+            "epsilon": result.summary()["epsilon"],
+        }
+
+    report: dict = {
+        "bench": "privacy",
+        "clients": len(clients),
+        "rounds": rounds,
+        "noise_multiplier": noise_multiplier,
+        "grid": {},
+    }
+    for staging in ("resident", "rebuild"):
+        cell: dict = {}
+        for engine in ("vectorized", "sequential"):
+            base = one(engine, staging)
+            protected = one(engine, staging, privacy=dp)
+            overhead = protected["round_time_s"] / base["round_time_s"] - 1.0
+            cell[engine] = {
+                "unprotected": base,
+                "dp": {**protected, "overhead_frac": overhead},
+            }
+            emit(
+                f"privacy_{staging}_{engine}_dp",
+                1e6 * protected["round_time_s"],
+                f"overhead={100 * overhead:+.1f}%"
+                f";eps={protected['epsilon']:.2f}",
+            )
+        seq_base = cell["sequential"]["unprotected"]["round_time_s"]
+        secagg = one("sequential", staging, aggregator="secagg-fedavg")
+        cell["secagg"] = {
+            **secagg,
+            "overhead_frac": secagg["round_time_s"] / seq_base - 1.0,
+        }
+        emit(
+            f"privacy_{staging}_secagg",
+            1e6 * secagg["round_time_s"],
+            f"overhead={100 * cell['secagg']['overhead_frac']:+.1f}%"
+            f";engine={secagg['effective_engine']}",
+        )
+        report["grid"][staging] = cell
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}", flush=True)
+
+
+# --------------------------------------------------------------------------
 # kernels
 # --------------------------------------------------------------------------
 
@@ -666,7 +762,7 @@ def main() -> None:
         "--mode",
         choices=[
             "all", "cohort", "kernels", "paper", "paper189", "pipeline",
-            "async", "service", "population",
+            "async", "service", "population", "privacy",
         ],
         default="all",
         help="'cohort' times sequential vs vectorized federated rounds only; "
@@ -676,7 +772,9 @@ def main() -> None:
         "under straggler latency models; 'service' probes the job-service "
         "envelope vs a direct Federation.run (merged into BENCH_pipeline.json); "
         "'population' sweeps streaming recruitment + LRU-pooled rounds from "
-        "10^3 to 10^5 synthetic clients (BENCH_population.json)",
+        "10^3 to 10^5 synthetic clients (BENCH_population.json); 'privacy' "
+        "measures DP-SGD and secure-aggregation per-round overhead at 189 "
+        "clients against the unprotected baseline (BENCH_privacy.json)",
     )
     ap.add_argument("--cohort-clients", type=int, nargs="+", default=[8, 32, 128])
     ap.add_argument("--paper189-rounds", type=int, default=3)
@@ -709,6 +807,18 @@ def main() -> None:
     ap.add_argument(
         "--population-rounds", type=int, default=3,
         help="population: training rounds per size (round 0 pays compile)",
+    )
+    ap.add_argument(
+        "--privacy-rounds", type=int, default=3,
+        help="privacy: rounds per grid cell (round 0 pays compile)",
+    )
+    ap.add_argument(
+        "--privacy-stays", type=int, default=189 * 8,
+        help="privacy: total stays across the 189 clients (CI-scaled)",
+    )
+    ap.add_argument(
+        "--privacy-noise", type=float, default=1.0,
+        help="privacy: DP noise multiplier (sigma / clip_norm)",
     )
     ap.add_argument(
         "--mesh-auto", action="store_true",
@@ -760,6 +870,14 @@ def main() -> None:
         bench_population(
             populations=tuple(args.population_sizes),
             rounds=args.population_rounds,
+        )
+        print(f"# total benchmark time: {time.time()-t0:.1f}s")
+        return
+    if args.mode == "privacy":
+        bench_privacy(
+            rounds=args.privacy_rounds,
+            total_stays=args.privacy_stays,
+            noise_multiplier=args.privacy_noise,
         )
         print(f"# total benchmark time: {time.time()-t0:.1f}s")
         return

@@ -95,6 +95,9 @@ class ExperimentConfig:
     # "hierarchical:4", ...).
     selection: Any = None
     aggregator: Any = "fedavg"
+    # In-jit DP-SGD: None (unprotected), a DPConfig, or a job-spec dict
+    # ({"clip_norm": ..., "noise_multiplier": ..., "delta": ...}).
+    privacy: Any = None
 
 
 def policies_for(setting: str, exp: ExperimentConfig) -> dict[str, Any]:
@@ -180,6 +183,7 @@ def run_setting(
             donate_buffers=exp.donate_buffers,
             staging=exp.staging,
             prefetch=exp.prefetch,
+            privacy=exp.privacy,
         )
         federation = Federation(fed_cfg, clients, loss_fn, optimizer)
         result = federation.run(init_params, progress=progress)
@@ -196,6 +200,7 @@ def run_setting(
             round_times_s=[r.wall_time_s for r in result.history],
             cohort_stats=federation.cohort_trainer.last_round_stats,
             comm={k: summary[k] for k in ("params_down", "params_up", "bytes_transferred")},
+            epsilon=summary["epsilon"],
         )
 
     y_hat = np.asarray(_predict(params, model_cfg, test))
@@ -1016,3 +1021,127 @@ def run_seeds(
     agg["federation_size"] = runs[0]["federation_size"]
     agg["recruited"] = runs[0]["recruited"]
     return agg
+
+
+def run_privacy_frontier(
+    exp: ExperimentConfig | None = None,
+    *,
+    setting: str = "federated-ac",
+    clip_norm: float = 1.0,
+    noise_multipliers: tuple = (0.5, 1.0, 2.0),
+    attacks: tuple = ("label-flip", "scaled-update"),
+    attack_fractions: tuple = (0.1, 0.2, 0.3),
+    aggregators: tuple = ("fedavg", "trimmed-mean:0.35", "krum:4"),
+    attack_scale: float = 50.0,
+    scenario_seed: int = 5,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict[str, Any]:
+    """The two privacy-tier frontiers on one cohort.
+
+    ``utility``: test metrics vs the accountant's final ``(epsilon,
+    delta)`` across noise multipliers, with the unprotected run as the
+    epsilon = None anchor — the utility cost of DP at the paper's
+    setting.  ``robustness``: test metrics for every (aggregator, attack,
+    attacker fraction) cell, with each aggregator's clean run as its own
+    baseline — what plain FedAvg loses under attack and the robust rules
+    retain.  Metrics come from the hold-out test split, which no attacker
+    touches.
+    """
+    from repro.privacy.adversary import ScenarioConfig, apply_scenario
+    from repro.privacy.dp import DPConfig
+
+    exp = exp or ExperimentConfig()
+    cohort = build_cohort(exp, seed=seed)
+    clients = build_client_datasets(cohort)
+    test = global_dataset(cohort, Cohort.TEST)
+    model_cfg = GRUConfig(use_pallas=exp.use_pallas)
+    loss_fn = make_loss_fn(model_cfg)
+    optimizer = AdamW(learning_rate=exp.learning_rate, weight_decay=exp.weight_decay)
+    init_params = init_gru(jax.random.key(seed), model_cfg)
+
+    def one_run(privacy=None, aggregator=None, scenario=None) -> dict[str, Any]:
+        policies = policies_for(setting, exp)
+        if aggregator is not None:
+            policies["aggregator"] = aggregator
+        fed_cfg = FederationConfig(
+            rounds=exp.rounds,
+            local_epochs=exp.local_epochs,
+            batch_size=exp.batch_size,
+            **policies,
+            seed=seed,
+            engine=exp.engine,
+            cohort_chunk=exp.cohort_chunk,
+            mesh=exp.mesh,
+            donate_buffers=exp.donate_buffers,
+            staging=exp.staging,
+            prefetch=exp.prefetch,
+            privacy=privacy,
+        )
+        federation = Federation(fed_cfg, clients, loss_fn, optimizer)
+        if scenario is not None:
+            apply_scenario(federation, scenario)
+        result = federation.run(init_params)
+        y_hat = np.asarray(_predict(result.params, model_cfg, test))
+        return {
+            "metrics": evaluate_predictions(test.y, y_hat),
+            "epsilon": result.summary()["epsilon"],
+            "tau_s": result.total_wall_time_s,
+            "engine": federation.effective_engine,
+        }
+
+    out: dict[str, Any] = {
+        "setting": setting,
+        "seed": seed,
+        "clip_norm": clip_norm,
+        "utility": [],
+        "robustness": [],
+    }
+
+    baseline = one_run()
+    out["utility"].append({"privacy": None, "epsilon": None, **baseline})
+    if verbose:
+        m = baseline["metrics"]
+        print(f"  [privacy {setting}] unprotected mae={m['mae']:.3f}", flush=True)
+    for nm in noise_multipliers:
+        dp = DPConfig(clip_norm=clip_norm, noise_multiplier=float(nm))
+        run = one_run(privacy=dp)
+        out["utility"].append({"privacy": dp.to_state(), **run})
+        if verbose:
+            m = run["metrics"]
+            print(
+                f"  [privacy {setting}] sigma/C={nm:g} "
+                f"eps={run['epsilon']:.2f} mae={m['mae']:.3f}",
+                flush=True,
+            )
+
+    for aggregator in aggregators:
+        clean = one_run(aggregator=aggregator)
+        out["robustness"].append(
+            {"aggregator": aggregator, "attack": None, "fraction": 0.0, **clean}
+        )
+        for attack in attacks:
+            for fraction in attack_fractions:
+                scenario = ScenarioConfig(
+                    attack=attack,
+                    fraction=float(fraction),
+                    scale=attack_scale,
+                    seed=scenario_seed,
+                )
+                run = one_run(aggregator=aggregator, scenario=scenario)
+                out["robustness"].append(
+                    {
+                        "aggregator": aggregator,
+                        "attack": attack,
+                        "fraction": float(fraction),
+                        **run,
+                    }
+                )
+                if verbose:
+                    m = run["metrics"]
+                    print(
+                        f"  [privacy {setting}] {aggregator} {attack}@{fraction:g} "
+                        f"mae={m['mae']:.3f} (clean {clean['metrics']['mae']:.3f})",
+                        flush=True,
+                    )
+    return out

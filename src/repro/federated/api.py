@@ -109,6 +109,8 @@ from repro.federated.fedavg import (
 )
 from repro.federated.selection import round_robin_clients, select_clients
 from repro.optim.adamw import AdamW
+from repro.privacy.accountant import RdpAccountant
+from repro.privacy.dp import DPConfig, resolve_dp
 
 PyTree = Any
 
@@ -515,7 +517,21 @@ class TrimmedMeanAggregator(Aggregator):
 
     def __init__(self, trim: float = 0.1) -> None:
         if not (0.0 <= trim < 0.5):
-            raise ValueError(f"trim fraction must be in [0, 0.5), got {trim}")
+            hint = (
+                f" — did you mean trim={min(trim / 2, 0.45):g} "
+                "(the fraction trimmed from *each* tail)?"
+                if 0.5 <= trim < 1.0
+                else (
+                    f" — to trim {trim:g} clients per tail out of C, pass "
+                    f"the fraction {trim:g}/C"
+                    if trim >= 1.0
+                    else ""
+                )
+            )
+            raise ValueError(
+                f"trim fraction must be in [0, 0.5), got {trim}: trimming "
+                f"half or more from both tails leaves no clients{hint}"
+            )
         self.trim = float(trim)
 
     def aggregate(self, stacked, weights):
@@ -571,6 +587,11 @@ class RoundRecord:
     # versions) of the updates folded into it.
     virtual_time: float | None = None
     staleness: float | None = None
+    # DP runs only: the cumulative (epsilon, delta)-DP budget *through* this
+    # round, from the run's Rényi accountant at the configured delta —
+    # monotonically non-decreasing over a run.  None without a privacy
+    # config.
+    epsilon: float | None = None
 
     @property
     def round_time_s(self) -> float:
@@ -625,6 +646,16 @@ class FederatedRunResult:
             )
             if async_records
             else None,
+            # DP runs: the final cumulative privacy budget (the last
+            # record's epsilon — the accountant only ever grows it).
+            "epsilon": next(
+                (
+                    r.epsilon
+                    for r in reversed(self.history)
+                    if r.epsilon is not None
+                ),
+                None,
+            ),
         }
 
 
@@ -724,6 +755,12 @@ class FederationConfig:
     # (LRU pool of client rows, uploads only the round's sampled clients —
     # see repro.data.device_cohort).  None = bake the whole federation.
     resident_budget_bytes: int | None = None
+    # In-jit DP-SGD (repro.privacy): a DPConfig, a job-spec dict
+    # ({"clip_norm": ..., "noise_multiplier": ..., "delta": ...}), or None.
+    # When set, every local step clips per-example gradients and adds
+    # calibrated Gaussian noise inside the jitted step, and each
+    # RoundRecord carries the accountant's cumulative epsilon.
+    privacy: DPConfig | dict | None = None
 
     def __post_init__(self) -> None:
         if self.engine not in ENGINES:
@@ -766,11 +803,13 @@ class Federation:
                 f"aggregator mode {self.aggregator.mode!r} not in {AGGREGATION_MODES}"
             )
         self.all_clients = {c.client_id: c for c in clients}
+        self.dp = resolve_dp(config.privacy)
         self.trainer = LocalTrainer(
             loss_fn=loss_fn,
             optimizer=optimizer,
             batch_size=config.batch_size,
             local_epochs=config.local_epochs,
+            dp=self.dp,
         )
         self.cohort_trainer = CohortTrainer(
             loss_fn=loss_fn,
@@ -783,6 +822,7 @@ class Federation:
             staging=config.staging,
             prefetch=config.prefetch,
             resident_budget_bytes=config.resident_budget_bytes,
+            dp=self.dp,
         )
 
     @property
@@ -937,6 +977,13 @@ class Federation:
             self.cohort_trainer.attach_device_cohort(
                 [self.all_clients[int(i)] for i in federation_ids]
             )
+        # One Rényi accountant per run: stepped once per round at that
+        # round's client sampling rate, read for every RoundRecord.
+        accountant = (
+            RdpAccountant(self.dp.noise_multiplier, delta=self.dp.delta)
+            if self.dp is not None
+            else None
+        )
         params = init_params
         history: list[RoundRecord] = []
         start_round = 0
@@ -952,6 +999,14 @@ class Federation:
             jax_rng = jax.random.wrap_key_data(jnp.asarray(resume.jax_key_data))
             history = list(resume.history)
             self.selection_policy.load_state_dict(resume.selection_state)
+            if accountant is not None:
+                # Privacy loss composes over the whole run: replay the
+                # completed rounds' sampling rates so the resumed segment's
+                # epsilons continue the original accounting.
+                for past in history:
+                    accountant.step(
+                        len(past.participant_ids) / federation_ids.size
+                    )
         # Pin the vectorized schedule's step axis to the federation-wide max
         # so every round shares one compiled shape whatever mix is sampled.
         federation_spe = cohort_steps_per_epoch(
@@ -980,6 +1035,10 @@ class Federation:
                 params, participants, rng, jax_rng, federation_spe
             )
             self.selection_policy.observe(participants, losses)
+            epsilon = None
+            if accountant is not None:
+                accountant.step(len(participants) / federation_ids.size)
+                epsilon = accountant.epsilon()
             record = RoundRecord(
                 round_index=rnd,
                 participant_ids=[int(c) for c in participants],
@@ -989,6 +1048,7 @@ class Federation:
                 params_up=len(participants) * n_tensors,
                 bytes_transferred=2 * len(participants) * model_nbytes,
                 wall_time_s=time.perf_counter() - t_round,
+                epsilon=epsilon,
             )
             history.append(record)
             if progress is not None:
@@ -1013,3 +1073,11 @@ class Federation:
             total_wall_time_s=time.perf_counter() - t_start,
             total_local_steps=sum(r.local_steps for r in history),
         )
+
+
+# Registry side effects: importing the privacy tier's aggregator modules here
+# makes "secagg-fedavg" and "krum" resolvable wherever the registry is.  The
+# import sits at the bottom because those modules import back the registry
+# helpers defined above — a deliberate, documented cycle-breaker.
+from repro.privacy import adversary as _adversary  # noqa: E402,F401
+from repro.privacy import secagg as _secagg  # noqa: E402,F401

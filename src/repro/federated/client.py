@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.data.pipeline import ClientDataset, local_round_steps
 from repro.optim.adamw import AdamW, apply_updates
+from repro.privacy.dp import DPConfig, dp_value_and_grad, resolve_dp
 
 PyTree = Any
 LossFn = Callable[..., Any]  # loss(params, batch, rng) -> scalar
@@ -33,12 +34,27 @@ class LocalTrainer:
     optimizer: AdamW
     batch_size: int
     local_epochs: int
+    # In-jit DP-SGD (repro.privacy.dp), mirroring CohortTrainer.dp so the
+    # sequential engine stays the vectorized engine's parity oracle under
+    # DP.  None builds the original step closure untouched.
+    dp: DPConfig | None = None
 
     def __post_init__(self) -> None:
-        def _step(params, opt_state, batch, rng):
-            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch, rng)
-            updates, opt_state = self.optimizer.update(grads, opt_state, params)
-            return apply_updates(params, updates), opt_state, loss
+        self.dp = resolve_dp(self.dp)
+        if self.dp is None:
+
+            def _step(params, opt_state, batch, rng):
+                loss, grads = jax.value_and_grad(self.loss_fn)(params, batch, rng)
+                updates, opt_state = self.optimizer.update(grads, opt_state, params)
+                return apply_updates(params, updates), opt_state, loss
+
+        else:
+            dp_grad = dp_value_and_grad(self.loss_fn, self.dp)
+
+            def _step(params, opt_state, batch, rng, noise_rng):
+                loss, grads = dp_grad(params, batch, rng, noise_rng)
+                updates, opt_state = self.optimizer.update(grads, opt_state, params)
+                return apply_updates(params, updates), opt_state, loss
 
         self._step = jax.jit(_step)
 
@@ -59,8 +75,19 @@ class LocalTrainer:
         for epoch in range(self.local_epochs):
             losses = []
             for x, y, mask in client.train.padded_batches(self.batch_size, rng):
-                jax_rng, sub = jax.random.split(jax_rng)
-                params, opt_state, loss = self._step(params, opt_state, (x, y, mask), sub)
+                if self.dp is None:
+                    jax_rng, sub = jax.random.split(jax_rng)
+                    params, opt_state, loss = self._step(
+                        params, opt_state, (x, y, mask), sub
+                    )
+                else:
+                    # Same 3-way split as the vectorized DP step (next-chain,
+                    # dropout, noise) so the engines consume identical keys.
+                    keys = jax.random.split(jax_rng, 3)
+                    jax_rng = keys[0]
+                    params, opt_state, loss = self._step(
+                        params, opt_state, (x, y, mask), keys[1], keys[2]
+                    )
                 losses.append(loss)
             last_losses = losses
         mean_loss = float(np.mean([float(l) for l in last_losses])) if last_losses else float("nan")

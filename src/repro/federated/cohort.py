@@ -93,6 +93,7 @@ from repro.federated.fedavg import weighted_sum_stacked
 from repro.federated.staging import StagingPipeline
 from repro.launch.hlo_analysis import live_buffer_stats
 from repro.optim.adamw import AdamW, apply_updates
+from repro.privacy.dp import DPConfig, dp_value_and_grad, resolve_dp
 
 PyTree = Any
 LossFn = Callable[..., Any]  # loss(params, batch, rng) -> scalar
@@ -168,6 +169,11 @@ class CohortTrainer:
     # jax.live_arrays() walks per chunk).  Cheap, but disable on
     # latency-critical loops that never read the stats.
     track_stats: bool = True
+    # In-jit DP-SGD: per-example clipping + Gaussian noise inside the
+    # jitted step (repro.privacy.dp).  None (the default) builds the
+    # original step closure untouched — the unprotected hot path stays
+    # bitwise identical.  Accepts a DPConfig or a job-spec dict.
+    dp: DPConfig | None = None
     # Peak live-buffer footprint + staging accounting of the most recent
     # train_cohort call, populated after every round.
     last_round_stats: dict[str, Any] | None = dataclasses.field(default=None, init=False)
@@ -187,18 +193,42 @@ class CohortTrainer:
         self._data_mesh = mesh
         self._num_shards = int(mesh.shape["data"]) if mesh is not None else 1
         self._device_cohort: DeviceCohort | None = None
+        self.dp = resolve_dp(self.dp)
 
-        def client_step(params, opt_state, key_data, batch, valid):
-            """One masked local step; dummy steps are exact no-ops."""
-            keys = jax.random.split(jax.random.wrap_key_data(key_data))
-            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch, keys[1])
-            updates, opt_new = self.optimizer.update(grads, opt_state, params)
-            params_new = apply_updates(params, updates)
-            keep = lambda new, old: jnp.where(valid, new, old)
-            params = jax.tree.map(keep, params_new, params)
-            opt_state = jax.tree.map(keep, opt_new, opt_state)
-            key_data = jnp.where(valid, jax.random.key_data(keys[0]), key_data)
-            return params, opt_state, key_data, jnp.where(valid, loss, jnp.nan)
+        if self.dp is None:
+
+            def client_step(params, opt_state, key_data, batch, valid):
+                """One masked local step; dummy steps are exact no-ops."""
+                keys = jax.random.split(jax.random.wrap_key_data(key_data))
+                loss, grads = jax.value_and_grad(self.loss_fn)(params, batch, keys[1])
+                updates, opt_new = self.optimizer.update(grads, opt_state, params)
+                params_new = apply_updates(params, updates)
+                keep = lambda new, old: jnp.where(valid, new, old)
+                params = jax.tree.map(keep, params_new, params)
+                opt_state = jax.tree.map(keep, opt_new, opt_state)
+                key_data = jnp.where(valid, jax.random.key_data(keys[0]), key_data)
+                return params, opt_state, key_data, jnp.where(valid, loss, jnp.nan)
+
+        else:
+            dp_grad = dp_value_and_grad(self.loss_fn, self.dp)
+
+            def client_step(params, opt_state, key_data, batch, valid):
+                """One masked DP-SGD local step: clip per example, noise in-jit.
+
+                The chain key splits 3 ways (next-chain, dropout, noise) so
+                noise draws ride the same per-client key chain as dropout —
+                seeded DP runs replay bit-identically.  Dummy steps stay
+                exact no-ops: the key only advances on valid steps.
+                """
+                keys = jax.random.split(jax.random.wrap_key_data(key_data), 3)
+                loss, grads = dp_grad(params, batch, keys[1], keys[2])
+                updates, opt_new = self.optimizer.update(grads, opt_state, params)
+                params_new = apply_updates(params, updates)
+                keep = lambda new, old: jnp.where(valid, new, old)
+                params = jax.tree.map(keep, params_new, params)
+                opt_state = jax.tree.map(keep, opt_new, opt_state)
+                key_data = jnp.where(valid, jax.random.key_data(keys[0]), key_data)
+                return params, opt_state, key_data, jnp.where(valid, loss, jnp.nan)
 
         def train_one(params, x_c, y_c, m_c, v_c, key_data):
             """All local epochs for one client: a scan over the step axis."""

@@ -80,7 +80,21 @@ def trimmed_mean_stacked(stacked: PyTree, trim: float) -> PyTree:
     ``trim = 0`` degenerates to the plain coordinate mean.
     """
     if not (0.0 <= trim < 0.5):
-        raise ValueError(f"trim fraction must be in [0, 0.5), got {trim}")
+        hint = (
+            f" — did you mean trim={min(trim / 2, 0.45):g} "
+            "(the fraction trimmed from *each* tail)?"
+            if 0.5 <= trim < 1.0
+            else (
+                f" — to trim {trim:g} clients per tail out of C, pass "
+                f"the fraction {trim:g}/C"
+                if trim >= 1.0
+                else ""
+            )
+        )
+        raise ValueError(
+            f"trim fraction must be in [0, 0.5), got {trim}: trimming half "
+            f"or more from both tails leaves no clients{hint}"
+        )
 
     def _trim(leaf):
         c = leaf.shape[0]

@@ -76,6 +76,7 @@ from repro.federated.runtime.latency import (
 from repro.federated.runtime.scheduler import Event, VirtualScheduler
 from repro.federated.runtime.staleness import AsyncAggregator, AsyncUpdate
 from repro.optim.adamw import AdamW
+from repro.privacy.accountant import RdpAccountant
 
 PyTree = Any
 
@@ -351,6 +352,8 @@ class AsyncFederation:
                 donate_buffers=config.donate_buffers,
                 staging=config.staging,
                 prefetch=config.prefetch,
+                resident_budget_bytes=config.resident_budget_bytes,
+                privacy=config.privacy,
             ),
             clients,
             loss_fn,
@@ -414,6 +417,16 @@ class AsyncFederation:
         n_tensors = len(jax.tree.leaves(init_params))
         model_nbytes = params_nbytes(init_params)
 
+        # DP runs carry one Rényi accountant across the whole event loop;
+        # each flush composes its participant fraction and stamps the
+        # record with the cumulative epsilon.
+        accountant = (
+            RdpAccountant(
+                self._fed.dp.noise_multiplier, delta=self._fed.dp.delta
+            )
+            if self._fed.dp is not None
+            else None
+        )
         params = init_params
         version = 0
         buffer: list[AsyncUpdate] = []
@@ -470,6 +483,13 @@ class AsyncFederation:
             self.latency_model.load_state_dict(resume.latency_state)
             stats = {**stats, **resume.stats}
             history = list(resume.history)
+            if accountant is not None:
+                # Privacy loss composes across the resume cut: replay the
+                # completed flushes' sampling rates before continuing.
+                for past in history:
+                    accountant.step(
+                        len(past.participant_ids) / federation_ids.size
+                    )
         t_start = time.perf_counter()
         t_last_flush = t_start
 
@@ -557,6 +577,10 @@ class AsyncFederation:
             )
             losses = np.concatenate([u.losses for u in updates])
             k = sum(len(u.client_ids) for u in updates)
+            epsilon = None
+            if accountant is not None:
+                accountant.step(len(participant_ids) / federation_ids.size)
+                epsilon = accountant.epsilon()
             now_host = time.perf_counter()
             record = RoundRecord(
                 round_index=version - 1,
@@ -569,6 +593,7 @@ class AsyncFederation:
                 wall_time_s=now_host - t_last_flush,
                 virtual_time=sched.now,
                 staleness=float(staleness.mean()) if len(staleness) else 0.0,
+                epsilon=epsilon,
             )
             t_last_flush = now_host
             history.append(record)

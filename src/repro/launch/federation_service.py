@@ -109,6 +109,7 @@ _COMMON_DEFAULTS: dict[str, Any] = {
     "data": None,
     "model": None,
     "optimizer": None,
+    "privacy": None,  # null = unprotected; object = in-jit DP-SGD section
 }
 _SYNC_DEFAULTS: dict[str, Any] = {"selection": "uniform"}
 _ASYNC_DEFAULTS: dict[str, Any] = {
@@ -129,6 +130,11 @@ _MODEL_DEFAULTS: dict[str, Any] = {
     "num_layers": 2,
     "dropout": 0.05,
     "use_pallas": False,
+}
+_PRIVACY_DEFAULTS: dict[str, Any] = {
+    "clip_norm": 1.0,          # per-example L2 clip (null = no clipping)
+    "noise_multiplier": 1.0,   # sigma / clip_norm (0 = clip-only, no noise)
+    "delta": 1e-5,             # accountant's target delta
 }
 _OPT_DEFAULTS: dict[str, Any] = {
     "learning_rate": 5e-3,
@@ -209,6 +215,15 @@ def validate_job_spec(spec: dict) -> dict:
     out["data"] = _merge_section(out, "data", _DATA_DEFAULTS)
     out["model"] = _merge_section(out, "model", _MODEL_DEFAULTS)
     out["optimizer"] = _merge_section(out, "optimizer", _OPT_DEFAULTS)
+    # privacy is tri-state: null stays null (unprotected — and hashes
+    # differently from any DP job), an object merges over the defaults.
+    if out["privacy"] is not None:
+        out["privacy"] = _merge_section(out, "privacy", _PRIVACY_DEFAULTS)
+        # Strict number validation (rejects JSON strings and booleans,
+        # negative clip norms, negative noise) lives with the DP config.
+        from repro.privacy.dp import resolve_dp
+
+        resolve_dp(out["privacy"])
 
     # Policy spec strings: resolve them now so typos die with suggestions.
     resolve_recruitment(out["recruitment"])
@@ -282,6 +297,9 @@ def federation_config_from_spec(spec: dict):
             if spec["resident_budget_bytes"] is None
             else int(spec["resident_budget_bytes"])
         ),
+        # .get(): snapshots written before the privacy tier existed carry
+        # specs without the key — they resume as unprotected jobs.
+        privacy=spec.get("privacy"),
     )
     if spec["mode"] == "sync":
         return FederationConfig(selection=spec["selection"], **common)

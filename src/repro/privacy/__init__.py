@@ -1,0 +1,80 @@
+"""Privacy & robustness tier: DP-SGD, masked-sum secagg, adversary scenarios.
+
+Three coordinated pieces over the federated engine (ROADMAP item 4):
+
+* :mod:`repro.privacy.dp` — in-jit DP-SGD (per-example clipping +
+  Gaussian noise inside the engines' jitted steps), configured with
+  :class:`DPConfig` threaded through ``FederationConfig.privacy``;
+* :mod:`repro.privacy.accountant` — a Rényi/moments accountant turning
+  per-round sampling rates into the cumulative ``(epsilon, delta)``
+  reported on every ``RoundRecord``;
+* :mod:`repro.privacy.secagg` — the ``"secagg-fedavg"`` aggregator whose
+  server-side sum only ever touches pairwise-masked fixed-point tensors;
+* :mod:`repro.privacy.adversary` — label-flip / scaled-update / sign-flip
+  attacker scenarios plus the ``"krum[:f]"`` robust aggregator.
+
+Only the leaf modules (``dp``, ``accountant``) load eagerly: the cohort
+engine imports ``repro.privacy.dp`` from inside ``repro.federated``, so
+this package must not import ``repro.federated`` back at init time.  The
+registry-facing names (secagg / adversary) resolve lazily on first
+attribute access; importing ``repro.federated.api`` registers their
+aggregator specs as a side effect either way.
+"""
+
+import importlib
+
+from repro.privacy.accountant import (
+    RdpAccountant,
+    epsilon_after,
+    rdp_subsampled_gaussian,
+)
+from repro.privacy.dp import (
+    DPConfig,
+    add_gaussian_noise,
+    dp_value_and_grad,
+    per_example_clip_factors,
+    resolve_dp,
+)
+
+_LAZY = {
+    "SecAggFedAvg": "secagg",
+    "dequantize_total": "secagg",
+    "masked_client_tensors": "secagg",
+    "masked_sum": "secagg",
+    "pair_masks": "secagg",
+    "quantize_leaf": "secagg",
+    "ring_offsets": "secagg",
+    "ATTACKS": "adversary",
+    "KrumAggregator": "adversary",
+    "ScenarioConfig": "adversary",
+    "apply_scenario": "adversary",
+    "attacker_ids": "adversary",
+    "flip_labels": "adversary",
+    "poison_clients": "adversary",
+}
+
+__all__ = [
+    "DPConfig",
+    "RdpAccountant",
+    "add_gaussian_noise",
+    "dp_value_and_grad",
+    "epsilon_after",
+    "per_example_clip_factors",
+    "rdp_subsampled_gaussian",
+    "resolve_dp",
+    *sorted(_LAZY),
+]
+
+
+def __getattr__(name: str):
+    module_name = _LAZY.get(name)
+    if module_name is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    module = importlib.import_module(f"repro.privacy.{module_name}")
+    value = getattr(module, name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,219 @@
+"""In-jit DP-SGD: per-example clipping + calibrated Gaussian noise.
+
+The privacy unit is one *local step*: every example's gradient is clipped
+to ``clip_norm`` in L2, the clipped gradients are summed, Gaussian noise
+with standard deviation ``noise_multiplier * clip_norm`` is added to the
+sum, and the noised sum is normalized by the batch's real example count —
+the classic DP-SGD estimator (Abadi et al. 2016).  All of it happens
+*inside* the engines' jitted step functions:
+
+* the vectorized engine's ``client_step`` (``repro.federated.cohort``)
+  computes per-example gradients with a ``jax.vmap`` over the batch axis
+  of the already-vmapped per-client step, so DP rides the same single
+  jitted vmap+scan round as the unprotected path — no per-client (or
+  per-example) Python loop ever appears;
+* the sequential engine's ``LocalTrainer._step`` uses the identical
+  :func:`dp_value_and_grad`, so the two engines stay parity oracles for
+  each other under DP exactly as they are without it.
+
+Key discipline: a DP step consumes a 3-way split of the per-client chain
+key (next-chain, dropout, noise) where the unprotected step consumes a
+2-way split.  Noise is therefore a pure function of the run seed — seeded
+DP runs replay bit-identically — and a ``dp=None`` trainer builds the
+*original* 2-way-split step closure untouched, keeping the unprotected
+hot path bitwise identical to the pre-privacy engine.
+
+Per-example gradients reuse the training ``loss_fn`` unchanged: the
+masked-mean loss evaluated on a singleton batch is exactly the example's
+masked (unnormalized) loss contribution, so summing per-example gradients
+and dividing by the batch's mask count reproduces the batch gradient —
+which is why ``DPConfig(clip_norm=None, noise_multiplier=0)`` matches the
+unprotected path to float-association tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+LossFn = Callable[..., Any]  # loss(params, batch, rng) -> scalar
+
+_DP_KEYS = ("clip_norm", "noise_multiplier", "delta")
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Per-step DP-SGD parameters, threaded as ``FederationConfig.privacy``.
+
+    ``clip_norm`` is the per-example L2 clipping bound (``None`` = no
+    clipping); ``noise_multiplier`` scales the Gaussian noise relative to
+    the clip (sigma = ``noise_multiplier * clip_norm`` on the summed
+    clipped gradients); ``delta`` is the accountant's target failure
+    probability.  Values are validated strictly — JSON job specs must
+    carry real numbers, never strings or booleans (truthy coercion of
+    ``"0.1"`` would silently change the privacy guarantee).
+    """
+
+    clip_norm: float | None = 1.0
+    noise_multiplier: float = 1.0
+    delta: float = 1e-5
+
+    def __post_init__(self) -> None:
+        _require_number("clip_norm", self.clip_norm, allow_none=True)
+        _require_number("noise_multiplier", self.noise_multiplier)
+        _require_number("delta", self.delta)
+        if self.clip_norm is not None and not (float(self.clip_norm) > 0):
+            raise ValueError(
+                f"privacy.clip_norm must be > 0 (or null for no clipping), "
+                f"got {self.clip_norm}"
+            )
+        if float(self.noise_multiplier) < 0:
+            raise ValueError(
+                f"privacy.noise_multiplier must be >= 0, got {self.noise_multiplier}"
+            )
+        if self.noise_multiplier > 0 and (
+            self.clip_norm is None or math.isinf(float(self.clip_norm))
+        ):
+            raise ValueError(
+                "privacy.noise_multiplier > 0 needs a finite clip_norm: the "
+                "noise is calibrated to noise_multiplier * clip_norm"
+            )
+        if not (0.0 < float(self.delta) < 1.0):
+            raise ValueError(f"privacy.delta must be in (0, 1), got {self.delta}")
+
+    @property
+    def effective_clip(self) -> float:
+        """The clipping bound as a float (``inf`` when clipping is off)."""
+        return math.inf if self.clip_norm is None else float(self.clip_norm)
+
+    @property
+    def noise_sigma(self) -> float:
+        """Noise std on the *summed* clipped gradients (0 when noiseless)."""
+        if float(self.noise_multiplier) == 0.0:
+            return 0.0
+        return float(self.noise_multiplier) * float(self.clip_norm)
+
+    def to_state(self) -> dict:
+        """JSON form — the job spec's ``privacy`` section."""
+        return {
+            "clip_norm": None if self.clip_norm is None else float(self.clip_norm),
+            "noise_multiplier": float(self.noise_multiplier),
+            "delta": float(self.delta),
+        }
+
+
+def _require_number(name: str, value, allow_none: bool = False) -> None:
+    if value is None and allow_none:
+        return
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        raise TypeError(
+            f"privacy.{name} must be a number, got {value!r} "
+            f"({type(value).__name__}) — JSON strings are rejected, never coerced"
+        )
+
+
+def resolve_dp(spec) -> DPConfig | None:
+    """``None`` / :class:`DPConfig` / job-spec dict -> validated config.
+
+    The dict form is the JSON job spec's ``privacy`` section; unknown keys
+    fail fast with the allowed set, matching the control plane's
+    validation convention.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, DPConfig):
+        return spec
+    if isinstance(spec, dict):
+        unknown = sorted(set(spec) - set(_DP_KEYS))
+        if unknown:
+            raise ValueError(
+                f"unknown privacy key(s) {unknown} (allowed: {sorted(_DP_KEYS)})"
+            )
+        return DPConfig(**spec)
+    raise TypeError(
+        f"privacy must be None, a DPConfig, or a dict, got {type(spec).__name__}"
+    )
+
+
+def per_example_clip_factors(grads: PyTree, clip_norm: float) -> jax.Array:
+    """(B,) scale factors bounding each example's gradient L2 norm.
+
+    ``grads`` carries a leading example axis on every leaf.  With
+    ``clip_norm = inf`` every factor is exactly 1 — the clipped sum is the
+    plain per-example sum.
+    """
+    leaves = jax.tree.leaves(grads)
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32).reshape(g.shape[0], -1)), axis=1)
+        for g in leaves
+    )
+    norms = jnp.sqrt(sq)
+    return jnp.minimum(1.0, clip_norm / (norms + 1e-12))
+
+
+def add_gaussian_noise(tree: PyTree, key: jax.Array, sigma: float) -> PyTree:
+    """Add independent N(0, sigma^2) noise to every leaf (one key per leaf).
+
+    ``sigma`` is a Python float decided at trace time, so ``sigma == 0``
+    compiles to the identity — the noiseless DP path carries no RNG ops.
+    """
+    if sigma == 0.0:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        leaf
+        + sigma
+        * jax.random.normal(
+            k, leaf.shape, jnp.promote_types(leaf.dtype, jnp.float32)
+        ).astype(leaf.dtype)
+        for leaf, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noised)
+
+
+def dp_value_and_grad(loss_fn: LossFn, dp: DPConfig):
+    """DP-SGD drop-in for ``jax.value_and_grad(loss_fn)`` on masked batches.
+
+    Returns ``f(params, batch, rng, noise_key) -> (loss, grads)`` where
+    ``batch = (x, y, mask)``: per-example gradients (a vmap over the batch
+    axis — safe to nest under the cohort engine's per-client vmap and
+    ``lax.scan``), each clipped to ``dp.clip_norm``, summed, noised with
+    sigma ``dp.noise_sigma``, and normalized by the batch's real example
+    count.  The reported loss is the exact masked-mean batch loss.
+    """
+    clip = dp.effective_clip
+    sigma = dp.noise_sigma
+
+    def per_example(params, x_i, y_i, m_i, rng):
+        # The masked-mean loss on a singleton batch is m_i * loss_i (the
+        # mask is 0/1), i.e. the example's unnormalized contribution.
+        return loss_fn(params, (x_i[None], y_i[None], m_i[None]), rng)
+
+    def value_and_grad(params, batch, rng, noise_key):
+        x, y, m = batch
+        losses, grads = jax.vmap(
+            jax.value_and_grad(per_example), in_axes=(None, 0, 0, 0, None)
+        )(params, x, y, m, rng)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        factors = per_example_clip_factors(grads, clip)
+        clipped_sum = jax.tree.map(
+            lambda g: jnp.tensordot(
+                factors.astype(jnp.promote_types(g.dtype, jnp.float32)),
+                g.astype(jnp.promote_types(g.dtype, jnp.float32)),
+                axes=((0,), (0,)),
+            ),
+            grads,
+        )
+        noised = add_gaussian_noise(clipped_sum, noise_key, sigma)
+        grads_out = jax.tree.map(
+            lambda g, ref: (g / denom).astype(ref.dtype), noised, params
+        )
+        return jnp.sum(losses) / denom, grads_out
+
+    return value_and_grad

@@ -76,3 +76,25 @@ def test_delta_roundtrip():
 def test_params_nbytes():
     t = {"x": jnp.zeros((4, 4), jnp.float32), "y": jnp.zeros(8, jnp.float32)}
     assert params_nbytes(t) == (16 + 8) * 4
+
+
+def test_trimmed_mean_rejects_half_or_more_with_hint():
+    from repro.federated.api import resolve_aggregator
+    from repro.federated.fedavg import trimmed_mean_stacked
+
+    stacked = {"w": jnp.zeros((4, 3))}
+    # A trim of 0.5+ removes everything; the error suggests the per-tail
+    # fraction the caller probably meant.
+    with pytest.raises(ValueError, match="did you mean trim=0.25"):
+        trimmed_mean_stacked(stacked, 0.5)
+    with pytest.raises(ValueError, match="did you mean trim=0.3"):
+        trimmed_mean_stacked(stacked, 0.6)
+    # A client *count* gets redirected to the fraction form.
+    with pytest.raises(ValueError, match="pass the fraction 2/C"):
+        trimmed_mean_stacked(stacked, 2.0)
+    # Construction-time check: the registry spec fails before any round.
+    with pytest.raises(ValueError, match="did you mean trim=0.25"):
+        resolve_aggregator("trimmed-mean:0.5")
+    # Valid edge: trim just below one half.
+    out = trimmed_mean_stacked({"w": jnp.arange(4.0)[:, None]}, 0.49)
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.5])

@@ -1,0 +1,219 @@
+"""Adversarial-client regression suite: attacks that break plain FedAvg.
+
+The recipe (12 clients, seeded scenario) is chosen so the separation is
+decisive, not marginal:
+
+* Client 9 holds ~68% of the training samples; scenario seed 5 places it
+  among the label-flip attackers, so the poisoned *sample mass* is ~71%
+  while the poisoned *client count* stays at the allowed 30%.  FedAvg's
+  n_c weighting is exactly the vulnerability — a few large poisoned
+  clients dominate the weighted average — while trimmed-mean and Krum
+  are unweighted per-client rules and survive.
+* Scaled-update at scale 50 is the classic norm-amplification attack:
+  three attackers multiply their delta 50x and swamp the average.
+
+Robustness criterion is "does not degrade" (attacked <= clean + tol),
+not "close to clean": trimming changes which honest clients survive, so
+an attacked robust run can legitimately land *below* its clean run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import CohortConfig, build_client_datasets, generate_cohort
+from repro.data.pipeline import ArrayDataset
+from repro.federated import Federation, FederationConfig
+from repro.federated.api import resolve_aggregator
+from repro.models.gru import GRUConfig, init_gru, make_loss_fn
+from repro.optim import AdamW
+from repro.privacy.adversary import (
+    KrumAggregator,
+    ScenarioConfig,
+    apply_scenario,
+    attacker_ids,
+    flip_labels,
+)
+
+N_CLIENTS = 12
+ROUNDS = 6
+# Attacker placement: seed 5 puts the dominant client (~68% of samples)
+# in the label-flip set; seed 1 picks small clients for scaled-update,
+# where sample mass is irrelevant because the attack amplifies norms.
+LABEL_FLIP = ScenarioConfig(attack="label-flip", fraction=0.3, seed=5)
+SCALED_UPDATE = ScenarioConfig(
+    attack="scaled-update", fraction=0.25, scale=50.0, seed=1
+)
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    cohort = generate_cohort(CohortConfig().scaled(0.02), seed=0)
+    clients = build_client_datasets(cohort)[:N_CLIENTS]
+    mcfg = GRUConfig(dropout=0.0, hidden_dim=8, num_layers=1)
+    loss_fn = make_loss_fn(mcfg)
+    params0 = init_gru(jax.random.key(0), mcfg)
+    vx = jnp.asarray(np.concatenate([np.asarray(c.val.x) for c in clients]))
+    vy = jnp.asarray(np.concatenate([np.asarray(c.val.y) for c in clients]))
+    vm = jnp.ones(vy.shape[0], jnp.float32)
+    return clients, loss_fn, params0, (vx, vy, vm)
+
+
+@functools.lru_cache(maxsize=32)
+def _final_val_loss(aggregator, attack, engine, staging):
+    """Clean-validation loss after a federated run under the scenario.
+
+    The per-round mean_local_loss is contaminated by attacker-reported
+    losses (label-flip attackers report loss on poisoned data), so the
+    suite always re-evaluates the final parameters on the clean val
+    split with the real loss_fn.
+    """
+    clients, loss_fn, params0, val_batch = _fixture()
+    config = FederationConfig(
+        rounds=ROUNDS,
+        local_epochs=3,
+        batch_size=16,
+        aggregator=aggregator,
+        seed=0,
+        engine=engine,
+        staging=staging,
+    )
+    fed = Federation(clients=clients, loss_fn=loss_fn, config=config,
+                     optimizer=AdamW(learning_rate=5e-2))
+    if attack == "label-flip":
+        apply_scenario(fed, LABEL_FLIP)
+    elif attack == "scaled-update":
+        apply_scenario(fed, SCALED_UPDATE)
+    result = fed.run(params0)
+    return float(loss_fn(result.params, val_batch, jax.random.key(9)))
+
+
+# ---------------------------------------------------------------------------
+# Attacks break plain FedAvg
+
+
+@pytest.mark.parametrize("attack", ["label-flip", "scaled-update"])
+def test_attacks_break_plain_fedavg(attack):
+    clean = _final_val_loss("fedavg", None, "sequential", "rebuild")
+    attacked = _final_val_loss("fedavg", attack, "sequential", "rebuild")
+    # Empirically ~5.9x (label-flip) and ~3.5x (scaled-update); 2x is a
+    # comfortable margin that still fails if the attack stops biting.
+    assert attacked > 2.0 * clean, (
+        f"{attack} no longer degrades plain fedavg: "
+        f"clean {clean:.4f} vs attacked {attacked:.4f}"
+    )
+
+
+def test_label_flip_breaks_fedavg_on_vectorized_resident():
+    clean = _final_val_loss("fedavg", None, "vectorized", "resident")
+    attacked = _final_val_loss("fedavg", "label-flip", "vectorized", "resident")
+    assert attacked > 2.0 * clean
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregators survive the same attacks
+
+ROBUST_TOL = 0.1  # absolute slack over the aggregator's own clean run
+
+
+@pytest.mark.parametrize("aggregator", ["trimmed-mean:0.35", "krum:4"])
+@pytest.mark.parametrize("attack", ["label-flip", "scaled-update"])
+def test_robust_aggregators_do_not_degrade(aggregator, attack):
+    clean = _final_val_loss(aggregator, None, "sequential", "rebuild")
+    attacked = _final_val_loss(aggregator, attack, "sequential", "rebuild")
+    assert attacked <= clean + ROBUST_TOL, (
+        f"{aggregator} degraded under {attack}: "
+        f"clean {clean:.4f} vs attacked {attacked:.4f}"
+    )
+
+
+def test_trimmed_mean_survives_label_flip_on_vectorized_rebuild():
+    clean = _final_val_loss("trimmed-mean:0.35", None, "sequential", "rebuild")
+    attacked = _final_val_loss(
+        "trimmed-mean:0.35", "label-flip", "vectorized", "rebuild"
+    )
+    assert attacked <= clean + ROBUST_TOL
+
+
+def test_robust_aggregators_beat_attacked_fedavg():
+    broken = _final_val_loss("fedavg", "label-flip", "sequential", "rebuild")
+    trimmed = _final_val_loss(
+        "trimmed-mean:0.35", "label-flip", "sequential", "rebuild"
+    )
+    assert trimmed < broken
+
+
+# ---------------------------------------------------------------------------
+# Scenario mechanics (cheap unit tests)
+
+
+def test_attacker_ids_seeded_and_bounded():
+    ids = list(range(10))
+    a = attacker_ids(ids, ScenarioConfig(attack="label-flip", fraction=0.3, seed=7))
+    b = attacker_ids(ids, ScenarioConfig(attack="label-flip", fraction=0.3, seed=7))
+    np.testing.assert_array_equal(a, b)
+    assert a.size == 3
+    assert set(a.tolist()) <= set(ids)
+    none = attacker_ids(ids, ScenarioConfig(attack="label-flip", fraction=0.0))
+    assert none.size == 0
+    # fraction > 0 always drafts at least one attacker.
+    one = attacker_ids(ids, ScenarioConfig(attack="label-flip", fraction=0.01))
+    assert one.size == 1
+
+
+def test_scenario_config_validation():
+    with pytest.raises(ValueError, match="did you mean 'label-flip'"):
+        ScenarioConfig(attack="labelflip")
+    with pytest.raises(ValueError, match=r"fraction must be in \[0, 1\]"):
+        ScenarioConfig(attack="label-flip", fraction=1.5)
+    with pytest.raises(ValueError, match="scale must be finite"):
+        ScenarioConfig(attack="scaled-update", scale=float("inf"))
+
+
+def test_flip_labels_mirrors_targets():
+    y = np.array([1.0, 2.0, 10.0], dtype=np.float32)
+    ds = ArrayDataset(x=np.zeros((3, 4), np.float32), y=y)
+    flipped = flip_labels(ds)
+    np.testing.assert_allclose(np.asarray(flipped.y), [10.0, 9.0, 1.0])
+    assert flipped.x is ds.x
+
+
+def test_model_poisoning_rejects_grouped_aggregators():
+    clients, loss_fn, params0, _ = _fixture()
+    config = FederationConfig(
+        rounds=1, local_epochs=1, batch_size=16,
+        aggregator="hierarchical:2", seed=0, engine="sequential",
+    )
+    fed = Federation(clients=clients, loss_fn=loss_fn, config=config,
+                     optimizer=AdamW(learning_rate=5e-2))
+    with pytest.raises(ValueError, match="grouped"):
+        apply_scenario(fed, SCALED_UPDATE)
+
+
+def test_krum_spec_forms_and_validation():
+    agg = resolve_aggregator("krum:2,3")
+    assert isinstance(agg, KrumAggregator)
+    assert (agg.f, agg.m) == (2, 3)
+    with pytest.raises(ValueError, match="f >= 0"):
+        KrumAggregator(f=-1)
+    with pytest.raises(ValueError, match="m >= 1"):
+        KrumAggregator(m=0)
+    # Too few clients for the Byzantine guarantee: C < 2f + 3.
+    stacked = {"w": jnp.ones((4, 3))}
+    with pytest.raises(ValueError, match="2f\\+3"):
+        KrumAggregator(f=1).aggregate(stacked, jnp.ones(4))
+
+
+def test_krum_discards_the_obvious_outlier():
+    rng = np.random.default_rng(0)
+    honest = rng.normal(size=(6, 5)).astype(np.float32) * 0.01
+    outlier = np.full((1, 5), 100.0, dtype=np.float32)
+    stacked = {"w": jnp.asarray(np.concatenate([honest, outlier]))}
+    out = KrumAggregator(f=1).aggregate(stacked, jnp.ones(7))
+    assert float(jnp.max(jnp.abs(out["w"]))) < 1.0

@@ -1,0 +1,107 @@
+"""The job spec's ``privacy`` section: strict validation + hash round-trip."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.launch.federation_service import (
+    federation_config_from_spec,
+    job_spec_hash,
+    validate_job_spec,
+)
+from repro.privacy.dp import DPConfig
+
+
+def test_privacy_defaults_to_null_and_merges_section():
+    out = validate_job_spec({"mode": "sync"})
+    assert out["privacy"] is None
+    out = validate_job_spec({"mode": "sync", "privacy": {}})
+    assert out["privacy"] == {
+        "clip_norm": 1.0,
+        "noise_multiplier": 1.0,
+        "delta": 1e-5,
+    }
+    out = validate_job_spec(
+        {"mode": "sync", "privacy": {"noise_multiplier": 0.5}}
+    )
+    assert out["privacy"]["noise_multiplier"] == 0.5
+    assert out["privacy"]["clip_norm"] == 1.0
+
+
+def test_privacy_rejects_json_strings_and_bad_numbers():
+    with pytest.raises(TypeError, match="never coerced"):
+        validate_job_spec({"mode": "sync", "privacy": {"clip_norm": "0.1"}})
+    with pytest.raises(TypeError, match="never coerced"):
+        validate_job_spec(
+            {"mode": "sync", "privacy": {"noise_multiplier": "1.0"}}
+        )
+    with pytest.raises(TypeError, match="never coerced"):
+        validate_job_spec({"mode": "sync", "privacy": {"noise_multiplier": True}})
+    with pytest.raises(ValueError):
+        validate_job_spec({"mode": "sync", "privacy": {"clip_norm": -1.0}})
+    with pytest.raises(ValueError):
+        validate_job_spec(
+            {"mode": "sync", "privacy": {"noise_multiplier": -0.5}}
+        )
+    with pytest.raises(ValueError, match="did you mean"):
+        validate_job_spec({"mode": "sync", "privacy": {"clipnorm": 1.0}})
+    with pytest.raises(ValueError, match="must be an object"):
+        validate_job_spec({"mode": "sync", "privacy": "dp"})
+
+
+def test_privacy_spec_hash_round_trip():
+    spec = {"mode": "sync", "privacy": {"noise_multiplier": 1.3}}
+    normalized = validate_job_spec(spec)
+    digest = job_spec_hash(normalized)
+    # Re-validating the normalized form is a fixed point: same hash.
+    assert job_spec_hash(validate_job_spec(normalized)) == digest
+    # The DP job is a different experiment from the unprotected one...
+    assert digest != job_spec_hash(validate_job_spec({"mode": "sync"}))
+    # ...and from a differently-calibrated DP job.
+    other = validate_job_spec(
+        {"mode": "sync", "privacy": {"noise_multiplier": 0.7}}
+    )
+    assert digest != job_spec_hash(other)
+
+
+def test_privacy_flows_into_facade_configs():
+    sync = validate_job_spec({"mode": "sync", "privacy": {"clip_norm": 2.0}})
+    config = federation_config_from_spec(sync)
+    assert config.privacy == {
+        "clip_norm": 2.0,
+        "noise_multiplier": 1.0,
+        "delta": 1e-5,
+    }
+    async_spec = validate_job_spec(
+        {"mode": "async", "privacy": {"noise_multiplier": 0.0, "clip_norm": None}}
+    )
+    async_config = federation_config_from_spec(async_spec)
+    assert async_config.privacy["noise_multiplier"] == 0.0
+    # Old snapshots have no "privacy" key: they resume unprotected.
+    legacy = dict(validate_job_spec({"mode": "sync"}))
+    legacy.pop("privacy")
+    assert federation_config_from_spec(legacy).privacy is None
+
+
+def test_privacy_clip_only_and_noiseless_forms_validate():
+    out = validate_job_spec(
+        {
+            "mode": "sync",
+            "privacy": {"clip_norm": None, "noise_multiplier": 0.0},
+        }
+    )
+    assert out["privacy"]["clip_norm"] is None
+    # Noise without a clip norm is unbounded sensitivity — rejected.
+    with pytest.raises(ValueError, match="clip_norm"):
+        validate_job_spec(
+            {
+                "mode": "sync",
+                "privacy": {"clip_norm": None, "noise_multiplier": 1.0},
+            }
+        )
+
+
+def test_dp_config_state_round_trips_through_spec():
+    cfg = DPConfig(clip_norm=2.0, noise_multiplier=0.5, delta=1e-6)
+    out = validate_job_spec({"mode": "sync", "privacy": cfg.to_state()})
+    assert out["privacy"] == cfg.to_state()
