@@ -332,6 +332,54 @@ def bench_service(
 
 
 # --------------------------------------------------------------------------
+# observability: tracer-off / tracer-on overhead, sync + async engines
+# --------------------------------------------------------------------------
+
+def bench_obs(
+    rounds: int = 10,
+    flushes: int = 10,
+    repeats: int = 3,
+    out_path: str = "BENCH_obs.json",
+    trace_path: str = "BENCH_obs_trace.json",
+) -> None:
+    """The observability tax at the paper's 189 clients, both engines.
+
+    Three sync variants (bare hot loop, ``Federation`` with the null
+    tracer, ``Federation`` with a live tracer) plus an async off/on pair
+    (fedbuff, constant latency, so each flush is the same unit of work).
+    Budgets: instrumented-off <= 1% over bare, tracer-on <= 5% over off.
+    Writes ``BENCH_obs.json`` and exports the async on-run's ring as a
+    Perfetto-loadable ``BENCH_obs_trace.json`` sample.
+    """
+    from repro.experiments.paper import run_obs_overhead
+
+    report = run_obs_overhead(
+        rounds=rounds, flushes=flushes, repeats=repeats, trace_path=trace_path
+    )
+    sync, async_ = report["sync"], report["async"]
+    emit(
+        "obs_sync_off",
+        1e6 * sync["off_round_s"],
+        f"overhead={100 * sync['overhead_off_frac']:+.2f}%;budget=1%",
+    )
+    emit(
+        "obs_sync_on",
+        1e6 * sync["on_round_s"],
+        f"overhead={100 * sync['overhead_on_frac']:+.2f}%;budget=5%",
+    )
+    emit(
+        "obs_async_on",
+        1e6 * async_["on_flush_s"],
+        f"overhead={100 * async_['overhead_on_frac']:+.2f}%;budget=5%"
+        f";events={report['trace']['async_events']}",
+    )
+    emit("obs_within_budget", 0.0, report["within_budget"])
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}", flush=True)
+    print(f"# wrote {trace_path}", flush=True)
+
+
+# --------------------------------------------------------------------------
 # async runtime: simulated time-to-target under straggler distributions
 # --------------------------------------------------------------------------
 
@@ -762,7 +810,7 @@ def main() -> None:
         "--mode",
         choices=[
             "all", "cohort", "kernels", "paper", "paper189", "pipeline",
-            "async", "service", "population", "privacy",
+            "async", "service", "population", "privacy", "obs",
         ],
         default="all",
         help="'cohort' times sequential vs vectorized federated rounds only; "
@@ -774,7 +822,9 @@ def main() -> None:
         "'population' sweeps streaming recruitment + LRU-pooled rounds from "
         "10^3 to 10^5 synthetic clients (BENCH_population.json); 'privacy' "
         "measures DP-SGD and secure-aggregation per-round overhead at 189 "
-        "clients against the unprotected baseline (BENCH_privacy.json)",
+        "clients against the unprotected baseline (BENCH_privacy.json); "
+        "'obs' probes tracer-off/tracer-on overhead in both engines at 189 "
+        "clients and exports a sample Perfetto trace (BENCH_obs.json)",
     )
     ap.add_argument("--cohort-clients", type=int, nargs="+", default=[8, 32, 128])
     ap.add_argument("--paper189-rounds", type=int, default=3)
@@ -819,6 +869,10 @@ def main() -> None:
     ap.add_argument(
         "--privacy-noise", type=float, default=1.0,
         help="privacy: DP noise multiplier (sigma / clip_norm)",
+    )
+    ap.add_argument(
+        "--obs-repeats", type=int, default=3,
+        help="obs: alternating bare/off/on repeats per engine (floor estimator)",
     )
     ap.add_argument(
         "--mesh-auto", action="store_true",
@@ -879,6 +933,10 @@ def main() -> None:
             total_stays=args.privacy_stays,
             noise_multiplier=args.privacy_noise,
         )
+        print(f"# total benchmark time: {time.time()-t0:.1f}s")
+        return
+    if args.mode == "obs":
+        bench_obs(repeats=args.obs_repeats)
         print(f"# total benchmark time: {time.time()-t0:.1f}s")
         return
     if args.mode == "async":

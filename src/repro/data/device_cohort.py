@@ -33,6 +33,7 @@ from typing import Any, Sequence
 import numpy as np
 
 from repro.data.pipeline import ClientDataset, cohort_steps_per_epoch
+from repro.obs.trace import resolve_tracer
 
 PyTree = Any
 
@@ -114,6 +115,11 @@ class DeviceCohort:
     bytes_uploaded: int = 0
     _lru: OrderedDict = dataclasses.field(default_factory=OrderedDict, repr=False)
     _free: list = dataclasses.field(default_factory=list, repr=False)
+    # Observability: pool uploads record a "pool_upload" span (None = no-op).
+    tracer: Any = dataclasses.field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        self.tracer = resolve_tracer(self.tracer)
 
     @property
     def pad_index(self) -> int:
@@ -179,31 +185,34 @@ class DeviceCohort:
         if not missing:
             return 0
 
-        target_rows: list[int] = []
-        for _ in missing:
-            if self._free:
-                target_rows.append(self._free.pop())
-                continue
-            victim = next(cid for cid in self._lru if cid not in wanted)
-            row = self._lru.pop(victim)
-            del self.rows[victim]
-            self.evictions += 1
-            target_rows.append(row)
+        with self.tracer.span("pool_upload", track="pool", missing=len(missing)):
+            target_rows: list[int] = []
+            for _ in missing:
+                if self._free:
+                    target_rows.append(self._free.pop())
+                    continue
+                victim = next(cid for cid in self._lru if cid not in wanted)
+                row = self._lru.pop(victim)
+                del self.rows[victim]
+                self.evictions += 1
+                target_rows.append(row)
 
-        max_n = self.pad_index
-        hx = np.zeros((len(missing), max_n + 1, *self.x.shape[2:]), dtype=self.x.dtype)
-        hy = np.zeros((len(missing), max_n + 1), dtype=self.y.dtype)
-        for i, c in enumerate(missing):
-            n = c.n_train
-            hx[i, :n] = c.train.x
-            hy[i, :n] = c.train.y
-            self._lru[c.client_id] = target_rows[i]
-            self.rows[c.client_id] = target_rows[i]
-        idx = np.asarray(target_rows, dtype=np.int32)
-        self.x = _scatter_rows(self.x, idx, hx)
-        self.y = _scatter_rows(self.y, idx, hy)
-        self.uploads += len(missing)
-        self.bytes_uploaded += hx.nbytes + hy.nbytes
+            max_n = self.pad_index
+            hx = np.zeros(
+                (len(missing), max_n + 1, *self.x.shape[2:]), dtype=self.x.dtype
+            )
+            hy = np.zeros((len(missing), max_n + 1), dtype=self.y.dtype)
+            for i, c in enumerate(missing):
+                n = c.n_train
+                hx[i, :n] = c.train.x
+                hy[i, :n] = c.train.y
+                self._lru[c.client_id] = target_rows[i]
+                self.rows[c.client_id] = target_rows[i]
+            idx = np.asarray(target_rows, dtype=np.int32)
+            self.x = _scatter_rows(self.x, idx, hx)
+            self.y = _scatter_rows(self.y, idx, hy)
+            self.uploads += len(missing)
+            self.bytes_uploaded += hx.nbytes + hy.nbytes
         return len(missing)
 
 
@@ -211,6 +220,7 @@ def build_device_cohort(
     clients: Sequence[ClientDataset],
     mesh: Any = None,
     resident_budget_bytes: int | None = None,
+    tracer: Any = None,
 ) -> DeviceCohort:
     """Pad and upload every client's train arrays once.
 
@@ -275,6 +285,7 @@ def build_device_cohort(
             _sources=sources,
             pool_rows=pool_rows,
             _free=list(range(pool_rows - 1, -1, -1)),
+            tracer=tracer,
         )
 
     hx = np.zeros((num_rows, max_n + 1, *feat), dtype=x_dtype)
@@ -297,6 +308,7 @@ def build_device_cohort(
         dx, dy = jax.device_put((hx, hy))
     return DeviceCohort(
         x=dx, y=dy, rows=rows, nbytes=hx.nbytes + hy.nbytes, _sources=sources,
+        tracer=tracer,
     )
 
 

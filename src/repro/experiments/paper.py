@@ -632,6 +632,178 @@ def run_facade_overhead(
     return report
 
 
+def run_obs_overhead(
+    *,
+    rounds: int = 10,
+    flushes: int = 10,
+    local_epochs: int = 1,
+    batch_size: int = 8,
+    seed: int = 0,
+    total_stays: int = 189 * 16,
+    buffer_size: int = 32,
+    repeats: int = 3,
+    trace_capacity: int = 262144,
+    trace_path: str | None = None,
+    verbose: bool = True,
+) -> dict[str, Any]:
+    """The observability tax: tracer-off and tracer-on vs the bare loop.
+
+    Three sync variants drive the identical 189-client workload — the bare
+    PR-3 hot loop, ``Federation.run`` with the default null tracer, and
+    ``Federation.run`` with a live :class:`repro.obs.trace.Tracer` — plus an
+    off/on pair through the async virtual-clock engine (fedbuff, constant
+    latency, no dropout, so every flush is the same unit of work).  Budgets:
+    instrumented-off <= 1% over the bare loop (the null tracer is a handful
+    of attribute lookups per round; anything more is a hot-path sin) and
+    tracer-on <= 5% over tracer-off in both engines.  The async off path
+    reuses the sync path's null-tracer primitives, so its off budget rides
+    the sync probe.
+
+    Same floor estimator as :func:`run_facade_overhead`: CI throttling noise
+    is strictly additive, so the per-variant minimum steady-state round over
+    alternating repeats converges on the true cost, and the floor ratios
+    isolate the systematic overhead.
+    """
+    from repro.obs.trace import Tracer
+
+    cohort_cfg = paper_scale_cohort_config(total_stays=total_stays)
+    cohort = generate_cohort(cohort_cfg, seed=seed)
+    clients = build_client_datasets(cohort)
+    model_cfg = GRUConfig(hidden_dim=8, num_layers=1)
+    loss_fn = make_loss_fn(model_cfg)
+    params0 = init_gru(jax.random.key(seed), model_cfg)
+
+    def optimizer() -> AdamW:
+        return AdamW(learning_rate=5e-3, weight_decay=5e-3)
+
+    def bare_rounds() -> list[float]:
+        trainer = CohortTrainer(
+            loss_fn=loss_fn,
+            optimizer=optimizer(),
+            batch_size=batch_size,
+            local_epochs=local_epochs,
+            staging="resident",
+        )
+        trainer.attach_device_cohort(clients)
+        rng = np.random.default_rng(seed)
+        jax_rng = jax.random.key(seed)
+        spe = cohort_steps_per_epoch([c.n_train for c in clients], batch_size)
+        params, times = params0, []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            jax_rng, key_data = chain_split_keys(jax_rng, len(clients))
+            params, _, _ = trainer.train_cohort(
+                params, clients, rng, key_data, steps_per_epoch=spe
+            )
+            times.append(time.perf_counter() - t0)
+        jax.block_until_ready(params)
+        return times
+
+    def sync_rounds(tracer: Tracer | None) -> list[float]:
+        federation = Federation(
+            FederationConfig(
+                rounds=rounds, local_epochs=local_epochs, batch_size=batch_size,
+                recruitment="all", selection="uniform", aggregator="fedavg", seed=seed,
+            ),
+            clients,
+            loss_fn,
+            optimizer(),
+            tracer=tracer,
+        )
+        out = federation.run(params0)
+        jax.block_until_ready(out.params)
+        return [r.wall_time_s for r in out.history]
+
+    def async_flushes(tracer: Tracer | None) -> list[float]:
+        federation = AsyncFederation(
+            AsyncFederationConfig(
+                rounds=flushes, local_epochs=local_epochs, batch_size=batch_size,
+                recruitment="all", aggregator=f"fedbuff:{buffer_size}",
+                latency="constant", dropout="never", seed=seed,
+            ),
+            clients,
+            loss_fn,
+            optimizer(),
+            tracer=tracer,
+        )
+        out = federation.run(params0)
+        jax.block_until_ready(out.params)
+        return [r.wall_time_s for r in out.history]
+
+    def floor(times: list[float]) -> float:
+        return float(np.min(times[1:] if len(times) > 1 else times))
+
+    # Alternate every variant inside each repeat so a throttling window
+    # cannot hit only one path.
+    floors: dict[str, list[float]] = {
+        "bare": [], "sync_off": [], "sync_on": [], "async_off": [], "async_on": [],
+    }
+    trace_stats: dict[str, Any] = {}
+    last_async_tracer: Tracer | None = None
+    for _ in range(max(repeats, 1)):
+        floors["bare"].append(floor(bare_rounds()))
+        floors["sync_off"].append(floor(sync_rounds(None)))
+        sync_tracer = Tracer(capacity=trace_capacity)
+        floors["sync_on"].append(floor(sync_rounds(sync_tracer)))
+        floors["async_off"].append(floor(async_flushes(None)))
+        async_tracer = Tracer(capacity=trace_capacity)
+        floors["async_on"].append(floor(async_flushes(async_tracer)))
+        trace_stats = {
+            "sync_events": len(sync_tracer.events()),
+            "async_events": len(async_tracer.events()),
+            "sync_dropped": sync_tracer.dropped,
+            "async_dropped": async_tracer.dropped,
+        }
+        last_async_tracer = async_tracer
+    best = {name: min(values) for name, values in floors.items()}
+    sync_off = best["sync_off"] / best["bare"] - 1.0
+    sync_on = best["sync_on"] / best["sync_off"] - 1.0
+    async_on = best["async_on"] / best["async_off"] - 1.0
+    budget_off, budget_on = 0.01, 0.05
+    report = {
+        "bench": "obs_overhead",
+        "num_clients": len(clients),
+        "rounds": rounds,
+        "flushes": flushes,
+        "batch_size": batch_size,
+        "repeats": repeats,
+        "floors": floors,
+        "sync": {
+            "bare_round_s": best["bare"],
+            "off_round_s": best["sync_off"],
+            "on_round_s": best["sync_on"],
+            "overhead_off_frac": sync_off,
+            "overhead_on_frac": sync_on,
+        },
+        "async": {
+            "off_flush_s": best["async_off"],
+            "on_flush_s": best["async_on"],
+            "overhead_on_frac": async_on,
+        },
+        "trace": trace_stats,
+        "budget_off_frac": budget_off,
+        "budget_on_frac": budget_on,
+        "within_budget": bool(
+            sync_off <= budget_off and sync_on <= budget_on and async_on <= budget_on
+        ),
+    }
+    if trace_path is not None and last_async_tracer is not None:
+        report["trace"]["sample_path"] = last_async_tracer.export_chrome(trace_path)
+    if verbose:
+        print(
+            f"  [obs sync] bare={best['bare']:.4f}s off={best['sync_off']:.4f}s "
+            f"on={best['sync_on']:.4f}s off_overhead={100 * sync_off:+.2f}% "
+            f"on_overhead={100 * sync_on:+.2f}% (budgets 1%/5%)",
+            flush=True,
+        )
+        print(
+            f"  [obs async] off={best['async_off']:.4f}s on={best['async_on']:.4f}s "
+            f"on_overhead={100 * async_on:+.2f}% (budget 5%)",
+            flush=True,
+        )
+    return report
+
+
 ASYNC_LATENCY_MODELS = ("lognormal:0.6", "pareto:1.2")
 
 ASYNC_FEDERATIONS = (("all-clients", "all"), ("recruited", None))  # None -> nu-greedy

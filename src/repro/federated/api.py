@@ -108,6 +108,9 @@ from repro.federated.fedavg import (
     trimmed_mean_stacked,
 )
 from repro.federated.selection import round_robin_clients, select_clients
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import CompileWatcher
+from repro.obs.trace import Tracer, resolve_tracer
 from repro.optim.adamw import AdamW
 from repro.privacy.accountant import RdpAccountant
 from repro.privacy.dp import DPConfig, resolve_dp
@@ -600,11 +603,21 @@ class RoundRecord:
         return self.wall_time_s
 
     def to_state(self) -> dict:
-        """JSON-serializable form — one JSONL line of the record stream."""
-        return dataclasses.asdict(self)
+        """JSON-serializable form — one JSONL line of the record stream.
+
+        Serializes the canonical ``round_time_s`` name; ``from_state``
+        still accepts the legacy ``wall_time_s`` key so run directories
+        written before the rename keep resuming.
+        """
+        state = dataclasses.asdict(self)
+        state["round_time_s"] = state.pop("wall_time_s")
+        return state
 
     @classmethod
     def from_state(cls, state: dict) -> "RoundRecord":
+        state = dict(state)
+        if "round_time_s" in state:
+            state["wall_time_s"] = state.pop("round_time_s")
         return cls(**state)
 
 
@@ -616,6 +629,10 @@ class FederatedRunResult:
     federation_ids: np.ndarray
     total_wall_time_s: float
     total_local_steps: int
+    # Final observability snapshot (repro.obs.MetricsRegistry.snapshot()):
+    # staging/pool counters, comms bytes, compile events, DP epsilon — the
+    # run's whole metrics series folded to its last value.
+    metrics: dict[str, Any] | None = None
 
     def summary(self) -> dict[str, Any]:
         # Async-runtime totals: the simulated clock at the last flush and
@@ -656,6 +673,10 @@ class FederatedRunResult:
                 ),
                 None,
             ),
+            # The final metrics snapshot — staged bytes, prefetch hits,
+            # pool uploads/evictions, comms accounting — so summaries no
+            # longer drop the staging/observability counters.
+            "metrics": self.metrics,
         }
 
 
@@ -786,8 +807,17 @@ class Federation:
         clients: Sequence[ClientDataset],
         loss_fn: Callable[..., Any],
         optimizer: AdamW,
+        tracer: Tracer | None = None,
+        metrics: MetricsRegistry | None = None,
+        profiler: Any = None,
     ) -> None:
         self.config = config
+        # Observability: the null tracer keeps the uninstrumented hot path
+        # at a handful of no-op calls per round; the registry always exists
+        # so run summaries carry the staging/comms counters either way.
+        self.tracer = resolve_tracer(tracer)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.profiler = profiler
         self.recruitment_policy = resolve_recruitment(config.recruitment)
         self.selection_policy = resolve_selection(config.selection)
         self.aggregator = resolve_aggregator(config.aggregator)
@@ -823,6 +853,7 @@ class Federation:
             prefetch=config.prefetch,
             resident_budget_bytes=config.resident_budget_bytes,
             dp=self.dp,
+            tracer=self.tracer,
         )
 
     @property
@@ -912,10 +943,13 @@ class Federation:
                 group_w.append(sum(self.all_clients[int(c)].n_train for c in group))
                 losses.append(losses_g)
                 steps += steps_g
-            stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *group_params)
-            new_params = self.aggregator.aggregate(
-                stacked, np.asarray(group_w, dtype=np.float32)
-            )
+            with self.tracer.span("aggregate", groups=len(groups)):
+                stacked = jax.tree.map(
+                    lambda *leaves: jnp.stack(leaves), *group_params
+                )
+                new_params = self.aggregator.aggregate(
+                    stacked, np.asarray(group_w, dtype=np.float32)
+                )
             return new_params, np.concatenate(losses), steps, jax_rng
 
         # mode == "stacked": the aggregator needs every client's params, which
@@ -930,11 +964,60 @@ class Federation:
             weights.append(n_c)
             losses.append(loss)
             steps += self.trainer.steps_per_round(client)
-        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *client_params)
-        new_params = self.aggregator.aggregate(
-            stacked, np.asarray(weights, dtype=np.float32)
-        )
+        with self.tracer.span("aggregate", clients=len(participants)):
+            stacked = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves), *client_params
+            )
+            new_params = self.aggregator.aggregate(
+                stacked, np.asarray(weights, dtype=np.float32)
+            )
         return new_params, np.asarray(losses, dtype=np.float32), steps, jax_rng
+
+    # -- observability --------------------------------------------------------
+
+    def _absorb_round_metrics(self, record: RoundRecord) -> None:
+        """Fold a finished round into the metrics registry.
+
+        Absorbs the comms accounting and per-round loss from the record
+        plus the cohort engine's ad-hoc ``last_round_stats`` dict (staged
+        bytes, prefetch hits, pool uploads/evictions) into the typed
+        counters/gauges/histograms the control plane streams as
+        ``metrics.jsonl``.
+        """
+        m = self.metrics
+        m.counter("rounds.completed").inc()
+        m.counter("comms.params_down").inc(record.params_down)
+        m.counter("comms.params_up").inc(record.params_up)
+        m.counter("comms.bytes_down").inc(record.bytes_transferred // 2)
+        m.counter("comms.bytes_up").inc(
+            record.bytes_transferred - record.bytes_transferred // 2
+        )
+        m.counter("train.local_steps").inc(record.local_steps)
+        m.histogram("round.time_s").observe(record.wall_time_s)
+        if np.isfinite(record.mean_local_loss):
+            m.histogram("round.loss").observe(record.mean_local_loss)
+        if record.epsilon is not None:
+            m.gauge("privacy.epsilon").set(record.epsilon)
+        if record.staleness is not None:
+            m.histogram("async.staleness").observe(record.staleness)
+        if record.virtual_time is not None:
+            m.gauge("async.virtual_time").set(record.virtual_time)
+        stats = self.cohort_trainer.last_round_stats
+        if stats:
+            m.counter("staging.bytes_staged").inc(stats.get("bytes_staged", 0))
+            m.counter("staging.plans_prefetched").inc(
+                stats.get("plans_prefetched", 0)
+            )
+            m.counter("staging.chunks").inc(stats.get("chunks", 0))
+            m.gauge("staging.bytes_resident").set(stats.get("bytes_resident", 0))
+            m.gauge("staging.peak_live_bytes").set(stats.get("peak_live_bytes", 0))
+            if stats.get("pool"):
+                m.counter("pool.uploads").inc(stats.get("pool_uploads", 0))
+                m.counter("pool.evictions").inc(stats.get("pool_evictions", 0))
+                m.counter("pool.hits").inc(stats.get("pool_hits", 0))
+                m.counter("pool.bytes_uploaded").inc(
+                    stats.get("pool_bytes_uploaded", 0)
+                )
 
     # -- the round program ---------------------------------------------------
 
@@ -1016,54 +1099,77 @@ class Federation:
         # pytree and returns one of the same shape.
         n_tensors = len(jax.tree.leaves(init_params))
         model_nbytes = params_nbytes(init_params)
+        tracer = self.tracer
         t_start = time.perf_counter()
 
-        for rnd in range(start_round, cfg.rounds):
-            t_round = time.perf_counter()
-            participants = np.asarray(
-                self.selection_policy.select(rnd, federation_ids, rng)
-            )
-            if not (
-                len(participants) > 0
-                and np.all(np.diff(participants) > 0)
-                and set(participants.tolist()) <= set(federation_ids.tolist())
-            ):
-                raise ValueError(
-                    "selection must return a non-empty, strictly sorted subset of the federation"
-                )
-            params, losses, steps, jax_rng = self._train_round(
-                params, participants, rng, jax_rng, federation_spe
-            )
-            self.selection_policy.observe(participants, losses)
-            epsilon = None
-            if accountant is not None:
-                accountant.step(len(participants) / federation_ids.size)
-                epsilon = accountant.epsilon()
-            record = RoundRecord(
-                round_index=rnd,
-                participant_ids=[int(c) for c in participants],
-                mean_local_loss=float(np.nanmean(losses)) if len(losses) else float("nan"),
-                local_steps=steps,
-                params_down=len(participants) * n_tensors,
-                params_up=len(participants) * n_tensors,
-                bytes_transferred=2 * len(participants) * model_nbytes,
-                wall_time_s=time.perf_counter() - t_round,
-                epsilon=epsilon,
-            )
-            history.append(record)
-            if progress is not None:
-                progress(record)
-            if snapshot_hook is not None:
-                snapshot_hook(
-                    FederationSnapshot(
-                        round_index=rnd + 1,
-                        params=params,
-                        np_rng_state=rng.bit_generator.state,
-                        jax_key_data=np.asarray(jax.random.key_data(jax_rng)),
-                        history=list(history),
-                        selection_state=self.selection_policy.state_dict(),
+        with CompileWatcher(self.metrics) as watcher:
+            for rnd in range(start_round, cfg.rounds):
+                if self.profiler is not None:
+                    self.profiler.round_start(rnd)
+                t_round = time.perf_counter()
+                with tracer.span("select", round=rnd):
+                    participants = np.asarray(
+                        self.selection_policy.select(rnd, federation_ids, rng)
                     )
+                if not (
+                    len(participants) > 0
+                    and np.all(np.diff(participants) > 0)
+                    and set(participants.tolist()) <= set(federation_ids.tolist())
+                ):
+                    raise ValueError(
+                        "selection must return a non-empty, strictly sorted subset of the federation"
+                    )
+                with tracer.span(
+                    "train", round=rnd, participants=len(participants)
+                ):
+                    params, losses, steps, jax_rng = self._train_round(
+                        params, participants, rng, jax_rng, federation_spe
+                    )
+                self.selection_policy.observe(participants, losses)
+                epsilon = None
+                if accountant is not None:
+                    accountant.step(len(participants) / federation_ids.size)
+                    epsilon = accountant.epsilon()
+                wall = time.perf_counter() - t_round
+                record = RoundRecord(
+                    round_index=rnd,
+                    participant_ids=[int(c) for c in participants],
+                    mean_local_loss=float(np.nanmean(losses)) if len(losses) else float("nan"),
+                    local_steps=steps,
+                    params_down=len(participants) * n_tensors,
+                    params_up=len(participants) * n_tensors,
+                    bytes_transferred=2 * len(participants) * model_nbytes,
+                    wall_time_s=wall,
+                    epsilon=epsilon,
                 )
+                # The round span reuses the record's own start/duration so
+                # the trace reconciles exactly with round_time_s.
+                tracer.complete(
+                    "round",
+                    start=tracer.host_ts(t_round),
+                    dur=wall,
+                    round=rnd,
+                    participants=len(participants),
+                )
+                history.append(record)
+                watcher.poll()
+                self._absorb_round_metrics(record)
+                if progress is not None:
+                    progress(record)
+                if snapshot_hook is not None:
+                    with tracer.span("checkpoint", round=rnd):
+                        snapshot_hook(
+                            FederationSnapshot(
+                                round_index=rnd + 1,
+                                params=params,
+                                np_rng_state=rng.bit_generator.state,
+                                jax_key_data=np.asarray(jax.random.key_data(jax_rng)),
+                                history=list(history),
+                                selection_state=self.selection_policy.state_dict(),
+                            )
+                        )
+                if self.profiler is not None:
+                    self.profiler.round_end(rnd)
 
         return FederatedRunResult(
             params=params,
@@ -1072,6 +1178,7 @@ class Federation:
             federation_ids=federation_ids,
             total_wall_time_s=time.perf_counter() - t_start,
             total_local_steps=sum(r.local_steps for r in history),
+            metrics=self.metrics.snapshot(),
         )
 
 

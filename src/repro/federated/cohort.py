@@ -92,6 +92,7 @@ from repro.data.pipeline import (
 from repro.federated.fedavg import weighted_sum_stacked
 from repro.federated.staging import StagingPipeline
 from repro.launch.hlo_analysis import live_buffer_stats
+from repro.obs.trace import resolve_tracer
 from repro.optim.adamw import AdamW, apply_updates
 from repro.privacy.dp import DPConfig, dp_value_and_grad, resolve_dp
 
@@ -174,11 +175,16 @@ class CohortTrainer:
     # original step closure untouched — the unprotected hot path stays
     # bitwise identical.  Accepts a DPConfig or a job-spec dict.
     dp: DPConfig | None = None
+    # Observability: a repro.obs Tracer records per-chunk "stage" spans
+    # (on the staging track, whichever thread stages) and flows down to
+    # the device-cohort pool.  None resolves to the shared no-op tracer.
+    tracer: Any = None
     # Peak live-buffer footprint + staging accounting of the most recent
     # train_cohort call, populated after every round.
     last_round_stats: dict[str, Any] | None = dataclasses.field(default=None, init=False)
 
     def __post_init__(self) -> None:
+        self.tracer = resolve_tracer(self.tracer)
         if self.staging not in STAGING_MODES:
             raise ValueError(
                 f"unknown staging {self.staging!r}; choose from {STAGING_MODES}"
@@ -422,6 +428,7 @@ class CohortTrainer:
             clients,
             mesh=self._data_mesh,
             resident_budget_bytes=self.resident_budget_bytes,
+            tracer=self.tracer,
         )
         return self._device_cohort
 
@@ -507,12 +514,17 @@ class CohortTrainer:
         chunk = self.cohort_chunk or len(clients)
         resident = self.staging == "resident"
         dcohort = self._ensure_device_cohort(clients) if resident else None
-        pool_before = (0, 0, 0)
+        pool_before = (0, 0, 0, 0)
         if resident and dcohort.is_pooled:
             # One residency pass per round, before any plan is staged: rows
             # are then stable for the whole round, so the prefetch thread's
             # plan building never races an eviction.
-            pool_before = (dcohort.uploads, dcohort.evictions, dcohort.bytes_uploaded)
+            pool_before = (
+                dcohort.uploads,
+                dcohort.evictions,
+                dcohort.bytes_uploaded,
+                dcohort.hits,
+            )
             dcohort.ensure_resident(clients)
 
         baseline = live_buffer_stats() if self.track_stats else {"count": 0, "bytes": 0}
@@ -525,7 +537,7 @@ class CohortTrainer:
             peak["count"] = max(peak["count"], now["count"] - baseline["count"])
             peak["bytes"] = max(peak["bytes"], now["bytes"] - baseline["bytes"])
 
-        def stage_chunk(start: int) -> tuple[int, float, int, tuple, tuple]:
+        def _build_chunk(start: int) -> tuple[int, float, int, tuple, tuple]:
             """Build + upload one chunk's batch data.
 
             Returns (host bytes staged, chunk weight, real client count,
@@ -611,6 +623,12 @@ class CohortTrainer:
                 nbytes += key_data.nbytes
             return nbytes, weight, len(part), path, staged
 
+        def stage_chunk(start: int) -> tuple[int, float, int, tuple, tuple]:
+            # The span lands on whichever thread stages — inline here, or
+            # the StagingPipeline's producer during prefetch.
+            with self.tracer.span("stage", track="staging", chunk=int(start)):
+                return _build_chunk(start)
+
         acc = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.promote_types(p.dtype, jnp.float32)), params
         )
@@ -623,7 +641,7 @@ class CohortTrainer:
         starts = range(0, len(clients), chunk)
         pipeline: StagingPipeline | None = None
         if resident and self.prefetch and len(starts) > 1:
-            pipeline = StagingPipeline(stage_chunk, starts)
+            pipeline = StagingPipeline(stage_chunk, starts, tracer=self.tracer)
             staged_chunks = iter(pipeline)
         else:
             staged_chunks = (stage_chunk(s) for s in starts)
@@ -702,6 +720,7 @@ class CohortTrainer:
             "pool_uploads": dcohort.uploads - pool_before[0] if pooled else 0,
             "pool_evictions": dcohort.evictions - pool_before[1] if pooled else 0,
             "pool_bytes_uploaded": dcohort.bytes_uploaded - pool_before[2] if pooled else 0,
+            "pool_hits": dcohort.hits - pool_before[3] if pooled else 0,
         }
         real_steps = sum(local_round_steps(n, self.batch_size, self.local_epochs) for n in sizes)
         return new_params, per_losses, real_steps

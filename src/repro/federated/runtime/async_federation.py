@@ -67,6 +67,7 @@ from repro.federated.api import (
     resolve_aggregator,
 )
 from repro.federated.fedavg import params_nbytes
+from repro.obs.profile import CompileWatcher
 from repro.federated.runtime.latency import (
     DropoutModel,
     LatencyModel,
@@ -317,6 +318,9 @@ class AsyncFederation:
         clients: Sequence[ClientDataset],
         loss_fn: Callable[..., Any],
         optimizer: AdamW,
+        tracer: Any = None,
+        metrics: Any = None,
+        profiler: Any = None,
     ) -> None:
         if not isinstance(config, AsyncFederationConfig):
             raise TypeError(
@@ -358,7 +362,15 @@ class AsyncFederation:
             clients,
             loss_fn,
             optimizer,
+            tracer=tracer,
+            metrics=metrics,
+            profiler=profiler,
         )
+        # One observability surface for both facades: the inner Federation
+        # resolved the null tracer / built the registry; share them.
+        self.tracer = self._fed.tracer
+        self.metrics = self._fed.metrics
+        self.profiler = self._fed.profiler
         self.last_run_stats: dict[str, Any] | None = None
 
     @property
@@ -395,7 +407,7 @@ class AsyncFederation:
         cfg = self.config
         rng = np.random.default_rng(cfg.seed)      # the batch-plan stream
         jax_rng = jax.random.key(cfg.seed)         # the per-task key chain
-        sched = VirtualScheduler(seed=cfg.seed)    # clock + latency stream
+        sched = VirtualScheduler(seed=cfg.seed, tracer=self.tracer)
 
         federation_ids, recruitment = self._fed.build_federation()
         members = {int(i): self._fed.all_clients[int(i)] for i in federation_ids}
@@ -492,6 +504,22 @@ class AsyncFederation:
                     )
         t_start = time.perf_counter()
         t_last_flush = t_start
+        tracer = self.tracer
+        # Per-flush metric deltas: the stats dict is cumulative (and resume
+        # restores it alongside the registry, which already folded the
+        # pre-preemption values), so only the change since the last flush
+        # is incremented into the counters.
+        prev_stats = dict(stats)
+
+        def absorb_async_metrics() -> None:
+            m = self.metrics
+            for key in ("tasks", "dropped", "forced_flushes"):
+                delta = stats[key] - prev_stats.get(key, 0)
+                if delta:
+                    m.counter(f"async.{key}").inc(delta)
+                prev_stats[key] = stats[key]
+            m.gauge("async.in_flight").set(in_flight)
+            m.gauge("async.buffered_updates").set(len(buffer))
 
         def make_snapshot() -> AsyncFederationSnapshot:
             return AsyncFederationSnapshot(
@@ -541,24 +569,50 @@ class AsyncFederation:
                 [cid for cid in group if not self.dropout_model.drops(int(cid), sched.rng)]
             )
             update = None
-            if len(survivors):
-                task_params, losses, steps, jax_rng = self._fed._train_group(
-                    params, survivors, rng, jax_rng, spe
-                )
-                stats["steps_trained"] += steps
-                update = AsyncUpdate(
-                    client_ids=survivors,
-                    params=task_params,
-                    anchor=params,
-                    weight=float(sum(members[int(c)].n_train for c in survivors)),
-                    version=version,
-                    losses=np.asarray(losses, dtype=np.float32),
-                    local_steps=steps,
-                )
+            with tracer.span("dispatch", group=group_index, latency=latency):
+                if len(survivors):
+                    task_params, losses, steps, jax_rng = self._fed._train_group(
+                        params, survivors, rng, jax_rng, spe
+                    )
+                    stats["steps_trained"] += steps
+                    update = AsyncUpdate(
+                        client_ids=survivors,
+                        params=task_params,
+                        anchor=params,
+                        weight=float(sum(members[int(c)].n_train for c in survivors)),
+                        version=version,
+                        losses=np.asarray(losses, dtype=np.float32),
+                        local_steps=steps,
+                    )
             stats["tasks"] += 1
             stats["dropped"] += len(group) - len(survivors)
             in_flight += 1
             sched.after(latency, COMPLETE, _Completion(group_index, update))
+            if tracer.enabled:
+                # The task on the virtual clock: dispatched now, completing
+                # after its sampled latency, on its own per-client track —
+                # with a flow arrow from the server's dispatch point so
+                # straggler/dropout schedules read off the timeline.
+                track = (
+                    f"client:{int(group[0])}"
+                    if len(group) == 1
+                    else f"group:{group_index}"
+                )
+                fid = tracer.new_flow_id()
+                tracer.flow_start("task", fid, ts=sched.now, track="server")
+                tracer.complete(
+                    "task",
+                    start=sched.now,
+                    dur=latency,
+                    track=track,
+                    clock="virtual",
+                    group=group_index,
+                    clients=[int(c) for c in group],
+                    survivors=len(survivors),
+                    version=version,
+                    dropped=update is None,
+                )
+                tracer.flow_end("task", fid, ts=sched.now + latency, track=track)
 
         def dispatch_ready() -> None:
             """Dispatch ready tasks in queue order, respecting concurrency."""
@@ -595,8 +649,29 @@ class AsyncFederation:
                 staleness=float(staleness.mean()) if len(staleness) else 0.0,
                 epsilon=epsilon,
             )
+            # The flush span covers the whole inter-flush interval on the
+            # host clock — its duration is exactly round_time_s — plus an
+            # instant on the virtual timeline at the flush's event time.
+            tracer.complete(
+                "flush",
+                start=tracer.host_ts(t_last_flush),
+                dur=record.wall_time_s,
+                version=version - 1,
+                updates=len(updates),
+                virtual_time=sched.now,
+            )
+            tracer.instant(
+                "flush", ts=sched.now, clock="virtual",
+                version=version - 1, staleness=record.staleness,
+            )
             t_last_flush = now_host
             history.append(record)
+            watcher.poll()
+            absorb_async_metrics()
+            self._fed._absorb_round_metrics(record)
+            if self.profiler is not None:
+                self.profiler.round_end(version - 1)
+                self.profiler.round_start(version)
             if progress is not None:
                 progress(record)
             if version >= cfg.rounds:
@@ -605,77 +680,86 @@ class AsyncFederation:
                 return False
             return True
 
-        dispatch_ready()
-        while True:
-            if sched.empty:
-                if buffer and version < cfg.rounds:
-                    # Every task has reported but the buffer never crossed
-                    # the threshold (e.g. fedbuff:K over a federation of
-                    # fewer than K tasks): flush what there is rather than
-                    # deadlock — the semi-synchronous degenerate case.
-                    stats["forced_flushes"] += 1
-                    sched.schedule(sched.now, FLUSH)
-                    flush_pending = True
-                    continue
-                break
-            if (
-                cfg.max_virtual_time is not None
-                and sched.peek_time() > cfg.max_virtual_time
-            ):
-                break
-            event = sched.pop()
-            if event.kind == COMPLETE:
-                in_flight -= 1
-                done: _Completion = event.payload
-                if done.update is None:
-                    # Dropped: the client retries immediately — it never
-                    # blocks the buffer, so it cannot deadlock a flush.
-                    # (in_flight just fell below any concurrency cap, so
-                    # the retry always has a slot.)
-                    drought += 1
-                    if drought > drought_limit and cfg.max_virtual_time is None:
-                        raise RuntimeError(
-                            f"{drought} consecutive tasks dropped with no "
-                            "update reaching the server; the dropout model "
-                            "admits no progress — lower the dropout "
-                            "probability or set max_virtual_time to bound "
-                            "the simulation"
-                        )
-                    dispatch(done.group_index)
-                    continue
-                drought = 0
-                buffer.append(done.update)
-                idle.append(done.group_index)
-                # The completion freed a concurrency slot: fund the next
-                # not-yet-trained task with it right away.
-                dispatch_ready()
-                if self.aggregator.ready(len(buffer)) and not flush_pending:
-                    # Flush at the next event boundary (same time, later
-                    # seq): simultaneous completions land in one flush.
-                    sched.schedule(sched.now, FLUSH)
-                    flush_pending = True
-            elif event.kind == FLUSH:
-                flush_pending = False
-                if not buffer:
-                    continue
-                if not flush():
+        with CompileWatcher(self.metrics) as watcher:
+            dispatch_ready()
+            while True:
+                if sched.empty:
+                    if buffer and version < cfg.rounds:
+                        # Every task has reported but the buffer never
+                        # crossed the threshold (e.g. fedbuff:K over a
+                        # federation of fewer than K tasks): flush what
+                        # there is rather than deadlock — the
+                        # semi-synchronous degenerate case.
+                        stats["forced_flushes"] += 1
+                        sched.schedule(sched.now, FLUSH)
+                        flush_pending = True
+                        continue
                     break
-                # The new version exists: everyone who reported against the
-                # old one becomes ready again, behind any task still
-                # waiting for its first slot.
-                idle.sort()
-                ready.extend(idle)
-                idle.clear()
-                if snapshot_hook is not None:
-                    # The cut point: buffer just flushed, idle requeued,
-                    # nothing dispatched yet — resuming from here and
-                    # continuing are the same next action.
-                    snapshot_hook(make_snapshot())
-                dispatch_ready()
-            else:  # pragma: no cover - no other kinds are scheduled
-                raise RuntimeError(f"unknown event kind {event.kind!r}")
+                if (
+                    cfg.max_virtual_time is not None
+                    and sched.peek_time() > cfg.max_virtual_time
+                ):
+                    break
+                event = sched.pop()
+                if event.kind == COMPLETE:
+                    in_flight -= 1
+                    done: _Completion = event.payload
+                    if done.update is None:
+                        # Dropped: the client retries immediately — it never
+                        # blocks the buffer, so it cannot deadlock a flush.
+                        # (in_flight just fell below any concurrency cap, so
+                        # the retry always has a slot.)
+                        drought += 1
+                        if drought > drought_limit and cfg.max_virtual_time is None:
+                            raise RuntimeError(
+                                f"{drought} consecutive tasks dropped with no "
+                                "update reaching the server; the dropout model "
+                                "admits no progress — lower the dropout "
+                                "probability or set max_virtual_time to bound "
+                                "the simulation"
+                            )
+                        dispatch(done.group_index)
+                        continue
+                    drought = 0
+                    buffer.append(done.update)
+                    idle.append(done.group_index)
+                    # The completion freed a concurrency slot: fund the next
+                    # not-yet-trained task with it right away.
+                    dispatch_ready()
+                    if self.aggregator.ready(len(buffer)) and not flush_pending:
+                        # Flush at the next event boundary (same time, later
+                        # seq): simultaneous completions land in one flush.
+                        sched.schedule(sched.now, FLUSH)
+                        flush_pending = True
+                elif event.kind == FLUSH:
+                    flush_pending = False
+                    if not buffer:
+                        continue
+                    if not flush():
+                        break
+                    # The new version exists: everyone who reported against
+                    # the old one becomes ready again, behind any task still
+                    # waiting for its first slot.
+                    idle.sort()
+                    ready.extend(idle)
+                    idle.clear()
+                    if snapshot_hook is not None:
+                        # The cut point: buffer just flushed, idle requeued,
+                        # nothing dispatched yet — resuming from here and
+                        # continuing are the same next action.
+                        with tracer.span("checkpoint", version=version):
+                            snapshot_hook(make_snapshot())
+                    dispatch_ready()
+                else:  # pragma: no cover - no other kinds are scheduled
+                    raise RuntimeError(f"unknown event kind {event.kind!r}")
 
         jax.block_until_ready(params)
+        # Tail work since the last flush (dispatches that never flushed)
+        # still lands in the counters before the final snapshot.
+        absorb_async_metrics()
+        self.metrics.gauge("async.virtual_time").set(sched.now)
+        if self.profiler is not None:
+            self.profiler.stop()
         self.last_run_stats = {
             **stats,
             "virtual_time": sched.now,
@@ -691,4 +775,5 @@ class AsyncFederation:
             federation_ids=federation_ids,
             total_wall_time_s=time.perf_counter() - t_start,
             total_local_steps=sum(r.local_steps for r in history),
+            metrics=self.metrics.snapshot(),
         )

@@ -65,7 +65,7 @@ class VirtualScheduler:
     backwards.
     """
 
-    def __init__(self, seed: int = 0) -> None:
+    def __init__(self, seed: int = 0, tracer: Any = None) -> None:
         self._heap: list[tuple[float, int, Event]] = []
         self._next_seq = 0
         self.now = 0.0
@@ -73,6 +73,13 @@ class VirtualScheduler:
         # The run's latency/dropout stream, independent of the batch
         # scheduler's and the recruitment generator's streams.
         self.rng = np.random.default_rng([int(seed), 0x5EED])
+        # Observability: each popped event becomes an instant marker on the
+        # virtual-clock "scheduler" track (None = the shared no-op tracer),
+        # so the raw event walk is inspectable under the runtime's richer
+        # dispatch/task/flush spans.
+        from repro.obs.trace import resolve_tracer
+
+        self.tracer = resolve_tracer(tracer)
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -112,6 +119,10 @@ class VirtualScheduler:
         _, _, event = heapq.heappop(self._heap)
         self.now = event.time
         self.processed += 1
+        self.tracer.instant(
+            event.kind, ts=event.time, track="scheduler", clock="virtual",
+            seq=event.seq,
+        )
         return event
 
     def pending(self) -> list[Event]:

@@ -61,6 +61,8 @@ EX_TEMPFAIL = 75
 
 JOB_FILE = "job.json"
 RECORDS_FILE = "records.jsonl"
+METRICS_FILE = "metrics.jsonl"
+TRACE_FILE = "trace.json"
 CHECKPOINT_DIR = "checkpoint"
 FINAL_DIR = "final"
 RESULT_FILE = "result.json"
@@ -110,6 +112,7 @@ _COMMON_DEFAULTS: dict[str, Any] = {
     "model": None,
     "optimizer": None,
     "privacy": None,  # null = unprotected; object = in-jit DP-SGD section
+    "observability": None,  # null = uninstrumented; object = tracing/profiling
 }
 _SYNC_DEFAULTS: dict[str, Any] = {"selection": "uniform"}
 _ASYNC_DEFAULTS: dict[str, Any] = {
@@ -224,6 +227,16 @@ def validate_job_spec(spec: dict) -> dict:
         from repro.privacy.dp import resolve_dp
 
         resolve_dp(out["privacy"])
+    # observability is tri-state like privacy: null means the run is
+    # uninstrumented (the hash of an unobserved job stays stable), an
+    # object merges over the defaults and is strictly type-checked.
+    if out["observability"] is not None:
+        from repro.obs.profile import OBSERVABILITY_DEFAULTS, resolve_observability
+
+        out["observability"] = _merge_section(
+            out, "observability", OBSERVABILITY_DEFAULTS
+        )
+        resolve_observability(out["observability"])
 
     # Policy spec strings: resolve them now so typos die with suggestions.
     resolve_recruitment(out["recruitment"])
@@ -442,6 +455,23 @@ def _rewrite_records(path: str, history: list) -> None:
     os.replace(tmp, path)
 
 
+def _truncate_jsonl_prefix(path: str, count: int) -> None:
+    """Keep only the first ``count`` lines of a JSONL stream (atomic).
+
+    The metrics stream emits exactly one line per record, so truncating it
+    to the snapshot's record count keeps the two files in lockstep when a
+    preempted run rolls back past rounds the cut already streamed.
+    """
+    if not os.path.exists(path):
+        return
+    with open(path, encoding="utf-8") as fh:
+        lines = [line for line in fh if line.strip()]
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        fh.writelines(lines[:count])
+    os.replace(tmp, path)
+
+
 # ---------------------------------------------------------------------------
 # job execution
 # ---------------------------------------------------------------------------
@@ -469,18 +499,57 @@ def _run_job(
     preempt_after: int | None = None,
 ) -> dict:
     """Shared submit/resume engine: build, run, snapshot, finalize."""
-    from repro.checkpoint.store import save_pytree
+    from repro.checkpoint.store import (
+        federation_snapshot_state,
+        has_federation_snapshot,
+        save_pytree,
+    )
     from repro.federated.api import Federation
     from repro.federated.runtime import AsyncFederation
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.profile import RoundProfiler, resolve_observability
+    from repro.obs.trace import Tracer
 
     spec = job["spec"]
     spec_hash = job["spec_hash"]
     cfg = federation_config_from_spec(spec)
     workload = build_workload(spec)
     ckpt_dir = os.path.join(run_dir, CHECKPOINT_DIR)
+
+    # Observability: the metrics registry always exists (metrics.jsonl is
+    # part of the run-dir contract); the tracer and profiler only when the
+    # spec's observability section asks for them.  .get(): job.json files
+    # written before the observability tier existed resume uninstrumented.
+    obs = resolve_observability(spec.get("observability"))
+    metrics = MetricsRegistry()
+    if resume_snapshot is not None and has_federation_snapshot(ckpt_dir):
+        # Continue the series: counters resume from the snapshot instead of
+        # restarting at zero (the metrics.jsonl prefix was truncated to the
+        # same snapshot by resume_job).
+        metrics.load_snapshot(federation_snapshot_state(ckpt_dir).get("metrics"))
+    tracer = Tracer(capacity=obs.trace_capacity) if obs is not None and obs.trace else None
+    profiler = (
+        RoundProfiler(obs.jax_profile_rounds, os.path.join(run_dir, "jax_profile"))
+        if obs is not None and obs.jax_profile_rounds > 0
+        else None
+    )
+
+    metrics_path = os.path.join(run_dir, METRICS_FILE)
+    if resume_snapshot is None:
+        with open(metrics_path, "w", encoding="utf-8"):
+            pass  # truncate: a fresh run owns the whole series
+
+    def stream_metrics(record) -> None:
+        # Runs after the facade absorbed the round into the registry, so
+        # the line is the cumulative state *through* this record.
+        line = {"round_index": int(record.round_index), **metrics.snapshot()}
+        with open(metrics_path, "a", encoding="utf-8") as fh:
+            fh.write(json.dumps(line, sort_keys=True) + "\n")
+            fh.flush()
+
     stream = RecordStream(
         os.path.join(run_dir, RECORDS_FILE),
-        subscribers,
+        [stream_metrics, *subscribers],
         append=resume_snapshot is not None,
     )
     every = int(spec["checkpoint_every"])
@@ -488,7 +557,10 @@ def _run_job(
     def snapshot_hook(snap) -> None:
         index = int(snap.round_index)
         if index % every == 0 or (preempt_after is not None and index >= preempt_after):
-            snap.save(ckpt_dir, extra_state={"spec_hash": spec_hash})
+            snap.save(
+                ckpt_dir,
+                extra_state={"spec_hash": spec_hash, "metrics": metrics.snapshot()},
+            )
         if preempt_after is not None and index >= preempt_after:
             _write_json(
                 os.path.join(run_dir, RESULT_FILE),
@@ -496,20 +568,30 @@ def _run_job(
             )
             raise JobPreempted(run_dir, index)
 
-    if spec["mode"] == "sync":
-        federation = Federation(
-            cfg, workload.clients, workload.loss_fn, workload.optimizer
-        )
-    else:
-        federation = AsyncFederation(
-            cfg, workload.clients, workload.loss_fn, workload.optimizer
-        )
-    result = federation.run(
-        workload.init_params,
-        progress=stream.emit,
-        snapshot_hook=snapshot_hook,
-        resume=resume_snapshot,
+    facade_cls = Federation if spec["mode"] == "sync" else AsyncFederation
+    federation = facade_cls(
+        cfg,
+        workload.clients,
+        workload.loss_fn,
+        workload.optimizer,
+        tracer=tracer,
+        metrics=metrics,
+        profiler=profiler,
     )
+    try:
+        result = federation.run(
+            workload.init_params,
+            progress=stream.emit,
+            snapshot_hook=snapshot_hook,
+            resume=resume_snapshot,
+        )
+    finally:
+        # Preempted runs keep their partial trace too — the ring holds
+        # whatever happened up to the cut.
+        if tracer is not None:
+            tracer.export_chrome(os.path.join(run_dir, TRACE_FILE))
+        if profiler is not None:
+            profiler.stop()
 
     save_pytree(
         os.path.join(run_dir, FINAL_DIR),
@@ -608,6 +690,7 @@ def resume_job(
     )
     snapshot = snapshot_cls.load(ckpt_dir, workload.init_params)
     _rewrite_records(os.path.join(run_dir, RECORDS_FILE), snapshot.history)
+    _truncate_jsonl_prefix(os.path.join(run_dir, METRICS_FILE), len(snapshot.history))
     return _run_job(
         job,
         run_dir,

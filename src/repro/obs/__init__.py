@@ -1,0 +1,33 @@
+"""Observability layer: spans, metrics, and profiling hooks.
+
+Zero-dependency (stdlib-only at import time) tracing + metrics subsystem
+threaded through the federated stack:
+
+- :mod:`repro.obs.trace` — a bounded-ring span :class:`Tracer` with a
+  Chrome/Perfetto ``trace.json`` exporter; :data:`NULL_TRACER` is the
+  default everywhere so the instrumented-off hot path stays free.
+- :mod:`repro.obs.metrics` — typed counters/gauges/histograms behind a
+  :class:`MetricsRegistry` with a single ``snapshot()`` schema, streamed
+  as ``metrics.jsonl`` by the control plane and carried inside federation
+  snapshots so resume continues the series.
+- :mod:`repro.obs.profile` — optional ``jax.profiler`` capture around
+  designated rounds and compile-event capture (counts/times as metrics).
+
+``python -m repro.obs report <run_dir>`` renders a per-phase time
+breakdown and the top-k slowest clients from an exported trace.
+"""
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import NULL_TRACER, NullTracer, SpanEvent, Tracer, resolve_tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "SpanEvent",
+    "Tracer",
+    "resolve_tracer",
+]

@@ -1,0 +1,6 @@
+"""Entry point for ``python -m repro.obs report <run_dir>``."""
+
+from repro.obs.report import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

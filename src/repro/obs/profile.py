@@ -1,0 +1,190 @@
+"""Profiling hooks: ``jax.profiler`` round capture and compile-event metrics.
+
+Two optional instruments, both wired through the job spec's strict
+``observability`` section:
+
+- :class:`RoundProfiler` captures a ``jax.profiler`` trace around the
+  first N rounds of a run (the designated rounds), writing TensorBoard-
+  loadable artifacts under ``<run_dir>/jax_profile``.
+- :class:`CompileWatcher` registers a ``jax.monitoring`` listener and
+  counts compile events and their durations, surfacing them as
+  ``jit.compiles`` / ``jit.compile_time_s`` counters and a per-round
+  ``jit.round_compiles`` gauge — hot-path recompilation becomes an
+  assertable regression rather than a silent slowdown.
+
+Both degrade to no-ops when jax is missing or the monitoring API is
+unavailable, keeping ``repro.obs`` importable without jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.obs.metrics import MetricsRegistry
+
+# Defaults for the job spec's ``observability`` section.  ``None`` for the
+# section itself means "observability off" (same tri-state contract as the
+# ``privacy`` section).
+OBSERVABILITY_DEFAULTS: dict[str, Any] = {
+    "trace": True,
+    "trace_capacity": 65536,
+    "jax_profile_rounds": 0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservabilityConfig:
+    """Validated ``observability`` job-spec section."""
+
+    trace: bool = True
+    trace_capacity: int = 65536
+    jax_profile_rounds: int = 0
+
+
+def resolve_observability(section: Mapping[str, Any] | None) -> ObservabilityConfig | None:
+    """Strictly validate an ``observability`` section (``None`` = off)."""
+    if section is None:
+        return None
+    if not isinstance(section, Mapping):
+        raise ValueError(f"observability section must be an object or null, got {section!r}")
+    merged = dict(OBSERVABILITY_DEFAULTS)
+    for key, value in section.items():
+        if key not in OBSERVABILITY_DEFAULTS:
+            raise ValueError(
+                f"unknown observability key {key!r}; valid keys: "
+                f"{sorted(OBSERVABILITY_DEFAULTS)}"
+            )
+        merged[key] = value
+    if not isinstance(merged["trace"], bool):
+        raise ValueError(f"observability.trace must be a bool, got {merged['trace']!r}")
+    for key in ("trace_capacity", "jax_profile_rounds"):
+        value = merged[key]
+        if not isinstance(value, int) or isinstance(value, bool) or value < 0:
+            raise ValueError(f"observability.{key} must be a non-negative int, got {value!r}")
+    if merged["trace_capacity"] < 1:
+        raise ValueError("observability.trace_capacity must be >= 1")
+    return ObservabilityConfig(**merged)
+
+
+class RoundProfiler:
+    """Capture a ``jax.profiler`` trace around the first ``rounds`` rounds.
+
+    ``round_start``/``round_end`` are called by the round program with the
+    global round index; capture begins at the first observed round and
+    stops after ``rounds`` rounds have ended (so a resumed run profiles
+    its own first rounds, where recompilation would show up).
+    """
+
+    def __init__(self, rounds: int, log_dir: str):
+        self.rounds = int(rounds)
+        self.log_dir = str(log_dir)
+        self._active = False
+        self._seen = 0
+        self._failed = False
+
+    def round_start(self, round_index: int) -> None:
+        if self._failed or self.rounds <= 0 or self._active or self._seen >= self.rounds:
+            return
+        try:
+            import jax.profiler
+
+            jax.profiler.start_trace(self.log_dir)
+            self._active = True
+        except Exception:
+            # Missing profiler backend must never take down a training run.
+            self._failed = True
+
+    def round_end(self, round_index: int) -> None:
+        if not self._active:
+            return
+        self._seen += 1
+        if self._seen >= self.rounds:
+            self.stop()
+
+    def stop(self) -> None:
+        if not self._active:
+            return
+        try:
+            import jax.profiler
+
+            jax.profiler.stop_trace()
+        except Exception:
+            pass
+        self._active = False
+
+
+# One process-global jax.monitoring listener fans out to live watchers;
+# jax exposes register but no public unregister, so the listener is
+# installed once and consults this list.
+_ACTIVE_WATCHERS: list["CompileWatcher"] = []
+_LISTENER_STATE = {"installed": False, "available": True}
+
+
+def _install_listener() -> bool:
+    if _LISTENER_STATE["installed"]:
+        return True
+    if not _LISTENER_STATE["available"]:
+        return False
+    try:
+        import jax.monitoring
+
+        def on_event(event: str, **kw: Any) -> None:
+            if "compile" in event:
+                for watcher in _ACTIVE_WATCHERS:
+                    watcher.compiles += 1
+
+        def on_duration(event: str, duration: float, **kw: Any) -> None:
+            if "compile" in event:
+                for watcher in _ACTIVE_WATCHERS:
+                    watcher.compile_time_s += duration
+
+        jax.monitoring.register_event_listener(on_event)
+        jax.monitoring.register_event_duration_secs_listener(on_duration)
+        _LISTENER_STATE["installed"] = True
+        return True
+    except Exception:
+        _LISTENER_STATE["available"] = False
+        return False
+
+
+class CompileWatcher:
+    """Count jax compile events/durations while active; feed a registry.
+
+    Used as a context manager around a run's round loop; ``poll`` after
+    each round folds deltas into ``jit.compiles`` / ``jit.compile_time_s``
+    counters and sets the ``jit.round_compiles`` gauge so a steady-state
+    round recompiling shows up as a nonzero gauge.
+    """
+
+    def __init__(self, metrics: MetricsRegistry | None):
+        self.metrics = metrics
+        self.compiles = 0
+        self.compile_time_s = 0.0
+        self._polled_compiles = 0
+        self._polled_time_s = 0.0
+        self.available = False
+
+    def __enter__(self) -> "CompileWatcher":
+        self.available = _install_listener()
+        if self.available:
+            _ACTIVE_WATCHERS.append(self)
+        return self
+
+    def __exit__(self, *exc_info: object) -> None:
+        if self.available and self in _ACTIVE_WATCHERS:
+            _ACTIVE_WATCHERS.remove(self)
+
+    def poll(self) -> int:
+        """Fold deltas since the last poll into the registry; return delta."""
+        delta = self.compiles - self._polled_compiles
+        delta_t = self.compile_time_s - self._polled_time_s
+        self._polled_compiles = self.compiles
+        self._polled_time_s = self.compile_time_s
+        if self.metrics is not None:
+            if delta:
+                self.metrics.counter("jit.compiles").inc(delta)
+            if delta_t > 0:
+                self.metrics.counter("jit.compile_time_s").inc(delta_t)
+            self.metrics.gauge("jit.round_compiles").set(delta)
+        return delta

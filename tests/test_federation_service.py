@@ -223,12 +223,12 @@ def test_async_preempted_run_dir_state(async_runs):
     assert status["checkpoint_round"] == 2
     assert status["rounds_recorded"] == 2
     # The record stream prefix already matches the uninterrupted run
-    # (host wall_time_s excepted — real clocks are not replayed).
+    # (host round_time_s excepted — real clocks are not replayed).
     def states(path):
         out = []
         for r in read_records(os.path.join(path, "records.jsonl")):
             state = r.to_state()
-            state.pop("wall_time_s")
+            state.pop("round_time_s")
             out.append(state)
         return out
 
